@@ -1,0 +1,89 @@
+"""Low-level (no-DSL) mapper for cannon: raw JAX equivalent of
+../mapple_programs/cannon.mapple."""
+import itertools
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+def assign_point(point, space, machine_shape):
+    """hierarchical block: node-block over outer factors, then gpu index.
+
+    Without the decompose primitive the node/gpu factorization must be
+    derived by hand: factor nodes against the iteration space, factor the
+    per-node gpus against the sub-space, block over the node factors and
+    cyclic over the gpu factors."""
+    nodes, gpus = machine_shape
+    # hand-derived node factorization for a 2D space on 2 nodes: (2, 1)
+    node_f = (2, 1) if space[0] >= space[1] else (1, 2)
+    # per-node sub space and gpu factorization (2 gpus): (2, 1) or (1, 2)
+    sub = (space[0] // node_f[0], space[1] // node_f[1])
+    gpu_f = (2, 1) if sub[0] >= sub[1] else (1, 2)
+    nb = tuple(point[i] * node_f[i] // space[i] for i in range(2))
+    gc = tuple(point[i] % gpu_f[i] for i in range(2))
+    node_idx = nb[0] * node_f[1] + nb[1]
+    gpu_idx = gc[0] * gpu_f[1] + gc[1]
+    return node_idx, gpu_idx
+
+
+MACHINE_SHAPE = (2, 2)
+GRID_SHAPE = (2, 2)
+AXIS_NAMES = ("x", "y")
+MEMORY_KINDS = {"arg0": "device", "arg1": "device"}
+DONATED_ARGS = ("arg2",)
+MAX_IN_FLIGHT = 1
+
+
+def flat_device_id(node_idx, gpu_idx):
+    return node_idx * MACHINE_SHAPE[1] + gpu_idx
+
+
+def assignment_grid(grid_shape, machine_shape):
+    out = np.empty(grid_shape, dtype=np.int64)
+    for pt in itertools.product(*(range(s) for s in grid_shape)):
+        out[pt] = flat_device_id(*assign_point(pt, grid_shape, machine_shape))
+    return out
+
+
+def validate_bijection(grid):
+    flat = grid.reshape(-1)
+    n = int(np.prod(MACHINE_SHAPE))
+    if flat.size != n or len(np.unique(flat)) != n:
+        raise ValueError(
+            f"mapper is not a bijection onto {n} devices: {flat.tolist()}"
+        )
+    return flat
+
+
+def build_mesh(devices=None):
+    if devices is None:
+        devices = jax.devices()
+    grid = assignment_grid(GRID_SHAPE, MACHINE_SHAPE)
+    perm = validate_bijection(grid)
+    dev = np.asarray(devices, dtype=object)[perm].reshape(GRID_SHAPE)
+    return Mesh(dev, AXIS_NAMES)
+
+
+def operand_sharding(mesh, operand, spec_axes):
+    kind = MEMORY_KINDS.get(operand, "device")
+    try:
+        return NamedSharding(mesh, P(*spec_axes), memory_kind=kind)
+    except (TypeError, ValueError):
+        return NamedSharding(mesh, P(*spec_axes))
+
+
+def donate_argnums(arg_order):
+    return tuple(i for i, a in enumerate(arg_order) if a in DONATED_ARGS)
+
+
+class BoundedDispatcher:
+    """Backpressure: cap the number of in-flight step results."""
+
+    def __init__(self, depth=MAX_IN_FLIGHT):
+        self.depth = depth
+        self.pending = []
+
+    def submit(self, fut):
+        self.pending.append(fut)
+        while len(self.pending) > self.depth:
+            jax.block_until_ready(self.pending.pop(0))

@@ -1,0 +1,79 @@
+"""Low-level (no-DSL) mapper for pumma: raw JAX equivalent of
+../mapple_programs/pumma.mapple."""
+import itertools
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+def assign_point(point, space, machine_shape):
+    """block-cyclic over the flattened machine."""
+    nodes, gpus = machine_shape
+    total = nodes * gpus
+    linearized = point[0] * space[1] + point[1]
+    flat = linearized % total
+    # merge(0,1) semantics: fast dim is the node dim
+    return flat % nodes, flat // nodes
+
+
+MACHINE_SHAPE = (2, 2)
+GRID_SHAPE = (2, 2)
+AXIS_NAMES = ("x", "y")
+MEMORY_KINDS = {"arg0": "device"}
+DONATED_ARGS = ()
+MAX_IN_FLIGHT = 2
+
+
+def flat_device_id(node_idx, gpu_idx):
+    return node_idx * MACHINE_SHAPE[1] + gpu_idx
+
+
+def assignment_grid(grid_shape, machine_shape):
+    out = np.empty(grid_shape, dtype=np.int64)
+    for pt in itertools.product(*(range(s) for s in grid_shape)):
+        out[pt] = flat_device_id(*assign_point(pt, grid_shape, machine_shape))
+    return out
+
+
+def validate_bijection(grid):
+    flat = grid.reshape(-1)
+    n = int(np.prod(MACHINE_SHAPE))
+    if flat.size != n or len(np.unique(flat)) != n:
+        raise ValueError(
+            f"mapper is not a bijection onto {n} devices: {flat.tolist()}"
+        )
+    return flat
+
+
+def build_mesh(devices=None):
+    if devices is None:
+        devices = jax.devices()
+    grid = assignment_grid(GRID_SHAPE, MACHINE_SHAPE)
+    perm = validate_bijection(grid)
+    dev = np.asarray(devices, dtype=object)[perm].reshape(GRID_SHAPE)
+    return Mesh(dev, AXIS_NAMES)
+
+
+def operand_sharding(mesh, operand, spec_axes):
+    kind = MEMORY_KINDS.get(operand, "device")
+    try:
+        return NamedSharding(mesh, P(*spec_axes), memory_kind=kind)
+    except (TypeError, ValueError):
+        return NamedSharding(mesh, P(*spec_axes))
+
+
+def donate_argnums(arg_order):
+    return tuple(i for i, a in enumerate(arg_order) if a in DONATED_ARGS)
+
+
+class BoundedDispatcher:
+    """Backpressure: cap the number of in-flight step results."""
+
+    def __init__(self, depth=MAX_IN_FLIGHT):
+        self.depth = depth
+        self.pending = []
+
+    def submit(self, fut):
+        self.pending.append(fut)
+        while len(self.pending) > self.depth:
+            jax.block_until_ready(self.pending.pop(0))

@@ -1,0 +1,108 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> record.
+
+Runs the three selected (arch x shape) cells through a sequence of named
+knob configurations, recording the roofline terms of each step. The
+narrative (hypothesis / predicted delta / confirmed-refuted) lives in
+EXPERIMENTS.md §Perf; this driver produces the numbers.
+
+  PYTHONPATH=src python benchmarks/perf_iterations.py \
+      --out results/perf_iterations.json
+"""
+import argparse
+import json
+from pathlib import Path
+
+
+def experiments():
+    from repro.launch.knobs import Knobs
+
+    base = dict(sp_attention=False, wkv_impl="scan", microbatch=1)
+    return [
+        # ---- cell 1: worst roofline fraction (memory term pathological)
+        {
+            "cell": ("rwkv6-3b", "train_4k", "single"),
+            "steps": [
+                ("baseline: per-step WKV scan", Knobs(**base)),
+                ("chunked WKV (flash-linear-attention form)",
+                 Knobs(**{**base, "wkv_impl": "chunked"})),
+                ("chunked WKV + microbatch=2",
+                 Knobs(**{**base, "wkv_impl": "chunked", "microbatch": 2})),
+            ],
+        },
+        # ---- cell 2: most collective-bound (score-block resharding)
+        {
+            "cell": ("musicgen-medium", "train_4k", "single"),
+            "steps": [
+                ("baseline: partitioner-resharded attention", Knobs(**base)),
+                ("bf16 params before gather (REFUTED: no change)",
+                 Knobs(**{**base, "bf16_gather": True})),
+                ("shard_map SP attention",
+                 Knobs(**{**base, "sp_attention": True})),
+                ("SP attention + microbatch=4",
+                 Knobs(**{**base, "sp_attention": True, "microbatch": 4})),
+            ],
+        },
+        # ---- cell 3: the paper's own technique (EP dispatch volume)
+        {
+            "cell": ("deepseek-v2-lite-16b", "train_4k", "single"),
+            "steps": [
+                ("baseline: capacity 1.25", Knobs(**base)),
+                ("capacity 1.0 (a2a cut)",
+                 Knobs(**{**base, "moe_capacity": 1.0})),
+                ("+ shard_map SP attention",
+                 Knobs(**{**base, "moe_capacity": 1.0,
+                          "sp_attention": True})),
+                ("+ microbatch=4 (policy)",
+                 Knobs(**{**base, "moe_capacity": 1.0, "sp_attention": True,
+                          "microbatch": 0})),
+            ],
+        },
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/perf_iterations.json")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell
+
+    results = []
+    for exp in experiments():
+        arch, shape, mesh = exp["cell"]
+        print(f"\n### {arch} x {shape} x {mesh}")
+        for name, knobs in exp["steps"]:
+            rec = run_cell(arch, shape, mesh, knobs=knobs, verbose=False)
+            rt = rec.get("roofline", {})
+            mem = rec.get("memory_analysis", {})
+            row = {
+                "cell": exp["cell"], "step": name,
+                "status": rec["status"],
+                "compute_s": rt.get("compute_s"),
+                "memory_s": rt.get("memory_s"),
+                "collective_s": rt.get("collective_s"),
+                "bottleneck": rt.get("bottleneck"),
+                "useful": rt.get("useful_flops_ratio"),
+                "temp_gib": mem.get("temp_size_in_bytes", 0) / 2**30,
+                "collective_bytes": rec.get("collective_bytes"),
+                "error": rec.get("error"),
+            }
+            results.append(row)
+            if rec["status"] == "ok":
+                print(f"  {name:45s} comp={row['compute_s']:.3e} "
+                      f"mem={row['memory_s']:.3e} "
+                      f"coll={row['collective_s']:.3e} "
+                      f"[{row['bottleneck']}] useful={row['useful']:.2f} "
+                      f"temp={row['temp_gib']:.1f}GiB")
+            else:
+                print(f"  {name:45s} ERROR: {row['error']}")
+    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.out).write_text(json.dumps(results, indent=1))
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

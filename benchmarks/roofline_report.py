@@ -1,0 +1,103 @@
+"""Roofline table from the dry-run artifacts (assignment deliverable g).
+
+Reads results/dryrun_baseline.json (or $ROOFLINE_PATH) and prints, per
+(arch x shape x mesh): the three roofline terms, the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS, and HBM fit. ``compare()`` prints baseline vs
+optimized side by side.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+from repro.core import machine as hw
+
+_RESULTS = Path(__file__).resolve().parent.parent / "results"
+DEFAULT_PATH = Path(os.environ.get("ROOFLINE_PATH",
+                                   _RESULTS / "dryrun_baseline.json"))
+OPTIMIZED_PATH = _RESULTS / "dryrun_optimized.json"
+
+
+def load(path=DEFAULT_PATH):
+    return json.loads(Path(path).read_text())
+
+
+def hbm_total(rec) -> float:
+    m = rec.get("memory_analysis", {})
+    return (
+        m.get("argument_size_in_bytes", 0)
+        + m.get("temp_size_in_bytes", 0)
+        + m.get("output_size_in_bytes", 0)
+        - m.get("alias_size_in_bytes", 0)
+    )
+
+
+def run(report=print, path=DEFAULT_PATH) -> dict:
+    recs = [r for r in load(path) if r["status"] == "ok"]
+    report(
+        f"{'arch':22s} {'shape':12s} {'mesh':7s} {'mode':5s} "
+        f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+        f"{'bound':>10s} {'useful':>7s} {'HBM_GiB':>8s} {'fits':>5s}"
+    )
+    n_fit = 0
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rt = r["roofline"]
+        hbm = hbm_total(r) / 2**30
+        fits = hbm <= hw.HBM_BYTES / 2**30
+        n_fit += fits
+        report(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:7s} "
+            f"{r.get('sharding_mode', '?'):5s} "
+            f"{rt['compute_s']:10.3e} {rt['memory_s']:10.3e} "
+            f"{rt['collective_s']:10.3e} {rt['bottleneck']:>10s} "
+            f"{rt['useful_flops_ratio']:7.2f} {hbm:8.2f} "
+            f"{'y' if fits else 'N':>5s}"
+        )
+    skipped = [r for r in load(path) if r["status"] == "skipped"]
+    report(f"\n{len(recs)} cells ok, {len(skipped)} skipped "
+           f"(long_500k on full-attention archs), {n_fit}/{len(recs)} fit "
+           f"in {hw.HBM_BYTES / 2**30:.0f} GiB HBM")
+    if path == DEFAULT_PATH and OPTIMIZED_PATH.exists():
+        compare(report)
+    return {"ok": len(recs), "skipped": len(skipped), "fit": n_fit}
+
+
+def _dominant(rt) -> float:
+    return max(rt["compute_s"], rt["memory_s"], rt["collective_s"])
+
+
+def compare(report=print, base_path=None, opt_path=OPTIMIZED_PATH) -> dict:
+    """Baseline vs optimized: dominant-term speedup + HBM-fit per cell."""
+    base = {(r["arch"], r["shape"], r["mesh"]): r
+            for r in load(base_path or _RESULTS / "dryrun_baseline.json")
+            if r["status"] == "ok"}
+    opt = {(r["arch"], r["shape"], r["mesh"]): r
+           for r in load(opt_path) if r["status"] == "ok"}
+    report("\n--- baseline vs optimized (dominant roofline term) ---")
+    report(f"{'cell':45s} {'base_s':>10s} {'opt_s':>10s} {'speedup':>8s} "
+           f"{'fit b->o':>9s}")
+    gains = []
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        tb, to = _dominant(b["roofline"]), _dominant(o["roofline"])
+        fit_b = hbm_total(b) <= hw.HBM_BYTES
+        fit_o = hbm_total(o) <= hw.HBM_BYTES
+        sp = tb / max(to, 1e-12)
+        gains.append(sp)
+        if sp > 1.05 or sp < 0.95 or fit_b != fit_o:
+            report(f"{'x'.join(key):45s} {tb:10.3e} {to:10.3e} {sp:7.1f}x "
+                   f"{('y' if fit_b else 'N')}->{('y' if fit_o else 'N'):>4s}")
+    import math
+
+    gm = math.exp(sum(math.log(max(g, 1e-9)) for g in gains) / len(gains))
+    n_fit_o = sum(hbm_total(r) <= hw.HBM_BYTES for r in opt.values())
+    report(f"\ngeomean dominant-term speedup over {len(gains)} cells: "
+           f"{gm:.2f}x; optimized HBM fit: {n_fit_o}/{len(opt)}")
+    return {"geomean": gm, "cells": len(gains)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,101 @@
+"""Benchmark driver — one harness per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run           # everything
+  PYTHONPATH=src python -m benchmarks.run --only loc_table
+
+Prints a ``name,us_per_call,derived`` CSV at the end (microbench section)
+plus the per-table reports above it.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import (  # noqa: E402
+    decompose_sweep,
+    heuristic_gap,
+    loc_table,
+    mapper_tuning,
+    roofline_report,
+)
+
+SECTIONS = {
+    "loc_table": ("Table 1: mapper LoC, Mapple vs low-level", loc_table.run),
+    "mapper_tuning": ("Table 2: mapper tuning headroom", mapper_tuning.run),
+    "heuristic_gap": ("Fig 13: algorithm-specified vs runtime heuristics",
+                      heuristic_gap.run),
+    "decompose_sweep": ("Figs 14-17: decompose vs Algorithm 1 (180 configs)",
+                        decompose_sweep.run),
+    "roofline": ("Roofline table (from dry-run artifacts)",
+                 roofline_report.run),
+}
+
+
+def microbench(report=print) -> list[tuple[str, float, str]]:
+    """Core-op timings: name, us_per_call, derived."""
+    import jax.numpy as jnp
+
+    from repro.core import GPU, Machine, block_mapper
+    from repro.core.decompose import optimal_factorization
+    from repro.kernels import ops
+
+    rows = []
+
+    def timeit(name, fn, n=20, derived=""):
+        fn()  # warmup
+        t0 = time.perf_counter()
+        out = None
+        for _ in range(n):
+            out = fn()
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        us = (time.perf_counter() - t0) / n * 1e6
+        rows.append((name, us, derived))
+
+    timeit("decompose_solve_256x3",
+           lambda: optimal_factorization(256, (8192, 8192, 64)),
+           derived="optimal factorization; 3 dims")
+    m = Machine(GPU, shape=(16, 16))
+    mapper = block_mapper(m)
+    timeit("mapper_eval_grid_16x16",
+           lambda: mapper.assignment_grid((16, 16)),
+           derived="256-point tile->device evaluation")
+    a = jnp.ones((256, 256), jnp.float32)
+    b = jnp.ones((256, 256), jnp.float32)
+    timeit("pallas_matmul_256_interp", lambda: ops.matmul(a, b), n=3,
+           derived="interpret-mode (correctness path)")
+    timeit("jnp_matmul_256", lambda: (a @ b), n=50,
+           derived="XLA:CPU reference")
+    f = jnp.ones((512, 512), jnp.float32)
+    timeit("pallas_stencil_512_interp", lambda: ops.stencil_step(f), n=3,
+           derived="interpret-mode")
+
+    report("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        report(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None, choices=list(SECTIONS))
+    args = ap.parse_args()
+    keys = [args.only] if args.only else list(SECTIONS)
+    for key in keys:
+        title, fn = SECTIONS[key]
+        print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")
+        try:
+            fn()
+        except FileNotFoundError as e:
+            print(f"(skipped: {e} — run repro.launch.dryrun first)")
+    if args.only is None:
+        print(f"\n{'=' * 72}\nMicrobenchmarks\n{'=' * 72}")
+        microbench()
+
+
+if __name__ == "__main__":
+    main()

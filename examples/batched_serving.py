@@ -1,0 +1,51 @@
+"""Continuous-batching serving: slot reuse, mixed prompt/output lengths.
+
+Twelve requests with different prompt and generation lengths stream
+through four cache slots — finished sequences release their slot
+immediately (no tail-of-batch stragglers), the production pattern the
+decode_32k dry-run shape sizes at 128 slots x 32k cache.
+
+Run:  PYTHONPATH=src python examples/batched_serving.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build
+from repro.serving import ContinuousBatcher, Request
+
+
+def main() -> None:
+    cfg = get_config("smollm-135m").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(7)
+
+    batcher = ContinuousBatcher(model, params, n_slots=4, max_len=64)
+    reqs = []
+    for i in range(12):
+        r = Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=rng.integers(4, 16)),
+            max_new_tokens=int(rng.integers(4, 12)),
+        )
+        reqs.append(r)
+        batcher.submit(r)
+
+    t0 = time.perf_counter()
+    stats = batcher.run_until_drained()
+    dt = time.perf_counter() - t0
+    print(f"{stats.completed} requests in {stats.steps} scheduler steps "
+          f"({dt:.1f}s, {stats.tokens_out / dt:.1f} tok/s)")
+    s = stats.summary()
+    print(f"latency p50 {s['p50_latency_s']:.2f}s  "
+          f"p95 {s['p95_latency_s']:.2f}s")
+    for r in reqs[:4]:
+        print(f"req {r.uid}: prompt {len(r.prompt)} toks -> "
+              f"{r.generated}")
+
+
+if __name__ == "__main__":
+    main()

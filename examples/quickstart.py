@@ -1,0 +1,66 @@
+"""Quickstart: the Mapple DSL in five minutes.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (
+    GPU, Machine, block_mapper, cyclic_mapper, dsl,
+    greedy_factorization, optimal_factorization, halo_surface_volume,
+)
+
+# ---------------------------------------------------------------- 1. spaces
+# A machine is a processor space; primitives reshape it (paper Fig. 6).
+m = Machine(GPU, shape=(2, 4))            # 2 nodes x 4 GPUs
+print("machine:", m.shape)
+m1 = m.merge(0, 1)                        # -> (8,)
+m2 = m1.split(0, 2)                       # -> (2, 4) again (inverse)
+print("merge+split roundtrip:", m2.shape,
+      "identity:", all(m2.to_root((i, j)) == (i, j)
+                       for i in range(2) for j in range(4)))
+
+# ------------------------------------------------------------- 2. mapping
+# A mapper sends iteration points to processors (paper Fig. 3).
+b = block_mapper(m)
+print("block2D grid on (4, 8):")
+print(b.assignment_grid((4, 8)))
+print("cyclic2D grid on (4, 8):")
+print(cyclic_mapper(m).assignment_grid((4, 8)))
+
+# ----------------------------------------------------------- 3. decompose
+# The paper's key primitive: factor a processor count against the
+# iteration space to minimize communication (Sec. 4).
+lengths = (12, 18)
+opt = optimal_factorization(6, lengths)
+greedy = greedy_factorization(6, 2)       # Algorithm 1 (Chapel heuristic)
+print(f"\niteration space {lengths}, 6 processors:")
+print(f"  decompose -> {opt}, boundary elements ="
+      f" {2 * halo_surface_volume(lengths, opt):.0f}")
+print(f"  greedy    -> {greedy}, boundary elements ="
+      f" {2 * halo_surface_volume(lengths, greedy):.0f}")
+
+# ------------------------------------------------------ 4. textual mappers
+prog = dsl.parse("""
+m = Machine(GPU, shape=(2, 2))
+
+def block2d(Tuple ipoint, Tuple ispace):
+    idx = ipoint * m.size / ispace
+    return m[*idx]
+
+IndexTaskMap matmul block2d
+Region matmul arg0 GPU FBMEM
+Backpressure matmul 2
+""")
+p = prog.mappers["block2d"]((2, 3), (6, 6))
+print(f"\nMapple program: {prog.loc()} LoC; block2d (2,3) -> "
+      f"node {p.node}, gpu {p.proc}")
+
+# ------------------------------------------------- 5. mesh-planner (LM use)
+from repro.core.autosharder import LMWorkload, plan_mesh
+
+wl = LMWorkload(global_batch=256, seq_len=4096, d_model=2048, n_layers=24,
+                n_heads=32, n_kv_heads=8, param_count=2.5e9)
+plan = plan_mesh(256, wl)
+print(f"\n256 chips for a 2.5B LM -> dp={plan.dp} tp={plan.tp} "
+      f"({plan.candidates_considered} candidates, "
+      f"{plan.step_comm_bytes / 2**30:.1f} GiB/step modeled)")

@@ -1,0 +1,88 @@
+"""End-to-end driver: train a ~100M-param model for a few hundred steps.
+
+smollm-135m at FULL config is ~135M params — small enough for CPU when we
+shorten the sequence; this trains the real architecture (30 layers, GQA,
+tied embeddings) with the real substrate: AdamW + cosine, synthetic-corpus
+pipeline, async checkpointing, bounded-async dispatch, and a simulated
+mid-run failure with restart.
+
+Run:  PYTHONPATH=src python examples/train_lm.py  [--steps 300]
+(Use --tiny for a quick smoke pass.)
+"""
+import argparse
+import tempfile
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import make_pipeline
+from repro.models import build
+from repro.runtime import FailureInjector, SimulatedFailure
+from repro.training import (
+    AdamWConfig, TrainLoop, TrainState, init_state, make_train_step,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced config (fast smoke)")
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-135m")
+    if args.tiny:
+        cfg = cfg.reduced()
+    model = build(cfg)
+    print(f"training smollm-135m ({model.n_params:,} params) "
+          f"for {args.steps} steps, batch {args.batch} x seq {args.seq}")
+
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=args.steps // 10,
+                          total_steps=args.steps)
+    pipe = make_pipeline(cfg, seq_len=args.seq, global_batch=args.batch)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    state = init_state(model, jax.random.key(0), opt_cfg)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, keep=2, async_save=True)
+        loop = TrainLoop(step_fn, pipe, backpressure=2,
+                         checkpoint_manager=mgr,
+                         save_every=max(args.steps // 4, 10))
+        fail_step = args.steps // 2
+        injector = FailureInjector(fail_at_steps=(fail_step,), max_failures=1)
+
+        step = 0
+        history = []
+        while step < args.steps:
+            try:
+                def guarded(st, batch, _step=[step]):
+                    return step_fn(st, batch)
+
+                # run in segments so the injector can interrupt
+                for s in range(step, args.steps):
+                    injector.check(s)
+                    state, metrics = step_fn(state, pipe.batch(s))
+                    if s % 25 == 0:
+                        print(f"step {s:4d} loss {float(metrics['loss']):.4f}")
+                    history.append(float(metrics["loss"]))
+                    if (s + 1) % loop.save_every == 0:
+                        mgr.save(s + 1, state.as_tree(), {"cursor": s + 1})
+                step = args.steps
+            except SimulatedFailure as e:
+                print(f"!! {e} — restoring latest checkpoint")
+                mgr.wait()
+                step, tree, _ = mgr.restore()
+                state = TrainState.from_tree(tree)
+                print(f"   resumed at step {step}")
+        mgr.wait()
+
+    print(f"loss: {history[0]:.4f} -> {history[-1]:.4f} "
+          f"({len(history)} executed steps incl. replay)")
+    assert history[-1] < history[0], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Checkpoint substrate."""
+from repro.checkpoint.manager import CheckpointManager

@@ -1,0 +1,167 @@
+"""Checkpointing: step-atomic, mesh-agnostic, async-capable, hash-verified.
+
+Layout:  <dir>/step_<N>/
+            manifest.json        (step, flat keys, shapes, dtypes, sha256s,
+                                  data cursor, config fingerprint)
+            arrays.npz           (flat key -> ndarray, saved unsharded)
+         <dir>/LATEST            (atomic pointer file)
+
+Mesh-agnostic restore: arrays are saved as logical (unsharded) values and
+re-placed under whatever shardings the *new* mesh prescribes — this is what
+makes elastic rescale (repro/runtime/elastic.py) a restore-with-new-plan
+rather than a bespoke migration.
+
+Async mode ships the host copy off-thread so the train loop only blocks on
+device->host transfer, not on disk I/O (checkpoint/restart requirement for
+long runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+SEP = "/"
+
+
+def _flatten(tree, prefix=()) -> dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, prefix + (str(k),)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, prefix + (str(i),)))
+    else:
+        out[SEP.join(prefix)] = tree
+    return out
+
+
+def _unflatten(flat: dict[str, Any]) -> dict:
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split(SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return root
+
+
+def _sha(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    async_save: bool = False
+
+    def __post_init__(self):
+        Path(self.directory).mkdir(parents=True, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: dict, extra: dict | None = None) -> str:
+        """state: pytree of jax/np arrays. Returns the checkpoint path."""
+        flat = _flatten(state)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extra or {})
+            )
+            self._thread.start()
+            return str(Path(self.directory) / f"step_{step}")
+        return self._write(step, host, extra or {})
+
+    def _write(self, step: int, host: dict[str, np.ndarray], extra: dict) -> str:
+        final = Path(self.directory) / f"step_{step}"
+        tmp = Path(
+            tempfile.mkdtemp(prefix=f".step_{step}_", dir=self.directory)
+        )
+        manifest = {
+            "step": step,
+            "extra": extra,
+            "arrays": {
+                k: {
+                    "shape": list(v.shape),
+                    "dtype": str(v.dtype),
+                    "sha256": _sha(v),
+                }
+                for k, v in host.items()
+            },
+        }
+        np.savez(tmp / "arrays.npz", **host)
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)                       # atomic publish
+        latest = Path(self.directory) / "LATEST"
+        tmp_latest = latest.with_suffix(".tmp")
+        tmp_latest.write_text(str(step))
+        os.replace(tmp_latest, latest)
+        self._gc()
+        return str(final)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(Path(self.directory) / f"step_{s}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in Path(self.directory).glob("step_*"):
+            if (p / "manifest.json").exists():
+                out.append(int(p.name.split("_", 1)[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        latest = Path(self.directory) / "LATEST"
+        if latest.exists():
+            s = int(latest.read_text().strip())
+            if (Path(self.directory) / f"step_{s}" / "manifest.json").exists():
+                return s
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None = None, shardings=None,
+                verify: bool = True) -> tuple[int, dict, dict]:
+        """Returns (step, state, extra). ``shardings``: optional pytree of
+        NamedSharding to place restored arrays onto a (possibly different)
+        mesh."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = Path(self.directory) / f"step_{step}"
+        manifest = json.loads((path / "manifest.json").read_text())
+        with np.load(path / "arrays.npz") as z:
+            host = {k: z[k] for k in z.files}
+        if verify:
+            for k, meta in manifest["arrays"].items():
+                if _sha(host[k]) != meta["sha256"]:
+                    raise IOError(f"checkpoint corruption in {k} at step {step}")
+        flat_shardings = _flatten(shardings) if shardings is not None else {}
+        placed = {}
+        for k, v in host.items():
+            s = flat_shardings.get(k)
+            placed[k] = jax.device_put(v, s) if s is not None else v
+        return step, _unflatten(placed), manifest["extra"]

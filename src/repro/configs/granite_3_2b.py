@@ -1,0 +1,16 @@
+"""granite-3-2b [hf:ibm-granite/granite-3.0-2b-base] — GQA dense."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=49155,             # padded to 49408 for 16-way vocab sharding
+    tie_embeddings=True,
+    rope_theta=10000.0,
+)

@@ -1,0 +1,50 @@
+"""Mapple core: processor-space algebra, decompose solver, translation."""
+from repro.core.tuples import Tup
+from repro.core.pspace import ProcSpace, Processor
+from repro.core.machine import (
+    Machine, MachineSpec, GPU, TPU, CPU, FBMEM, ZCMEM, SYSMEM,
+    V5E_POD, V5E_TWO_PODS, PAPER_CLUSTER,
+    PEAK_FLOPS_BF16, HBM_BW, ICI_BW_PER_LINK, HBM_BYTES,
+)
+from repro.core.decompose import (
+    optimal_factorization,
+    greedy_factorization,
+    enumerate_factorizations,
+    halo_objective,
+    transpose_objective,
+)
+from repro.core.commvolume import (
+    halo_surface_volume,
+    aniso_halo_volume,
+    transpose_volume,
+    MatmulProblem,
+)
+from repro.core.mapper import (
+    Mapper,
+    block_mapper,
+    cyclic_mapper,
+    block_cyclic_mapper,
+    linear_cyclic_mapper,
+    hierarchical_block_mapper,
+    linearize_cyclic_mapper,
+    special_linearize3d_mapper,
+    conditional_linearize3d_mapper,
+)
+from repro.core.translate import MappingPlan, LayoutSpec, mesh_from_mapper
+from repro.core import dsl
+
+__all__ = [
+    "Tup", "ProcSpace", "Processor", "Machine", "MachineSpec",
+    "GPU", "TPU", "CPU", "FBMEM", "ZCMEM", "SYSMEM",
+    "V5E_POD", "V5E_TWO_PODS", "PAPER_CLUSTER",
+    "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW_PER_LINK", "HBM_BYTES",
+    "optimal_factorization", "greedy_factorization",
+    "enumerate_factorizations", "halo_objective", "transpose_objective",
+    "halo_surface_volume", "aniso_halo_volume", "transpose_volume",
+    "MatmulProblem",
+    "Mapper", "block_mapper", "cyclic_mapper", "block_cyclic_mapper",
+    "linear_cyclic_mapper", "hierarchical_block_mapper",
+    "linearize_cyclic_mapper", "special_linearize3d_mapper",
+    "conditional_linearize3d_mapper",
+    "MappingPlan", "LayoutSpec", "mesh_from_mapper", "dsl",
+]

@@ -1,0 +1,128 @@
+"""Decompose-driven mesh planning for LM training/serving (beyond-paper).
+
+The paper's Sec. 7.2 observation — *only the objective changes, the same
+enumerator applies* — is exactly what a production LM framework needs to
+pick its parallelism factorization. This module reuses the paper's optimal
+enumerator (`enumerate_factorizations`) with a communication objective built
+from the LM step (DP grad all-reduce, TP activation collectives, EP
+all-to-all), subject to hardware-integrality constraints (tp | heads,
+ep | experts, dp | batch).
+
+This is the "Mapple as a first-class feature" integration: the launcher
+asks the planner for a `MeshPlan`, the same way the matmul benchmarks ask
+`decompose` for a processor grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.commvolume import LMCommModel
+from repro.core.decompose import enumerate_factorizations
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """A chosen factorization of the chip count into parallelism axes."""
+
+    dp: int
+    tp: int
+    ep: int = 1
+    step_comm_bytes: float = 0.0
+    candidates_considered: int = 0
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.dp, self.tp)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMWorkload:
+    """Iteration-space description of one LM step, for the planner."""
+
+    global_batch: int
+    seq_len: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    param_count: float
+    dtype_bytes: int = 2
+    n_experts: int = 0            # routed experts (0 = dense)
+    n_moe_layers: int = 0
+    topk: int = 0
+    ffn_mult_bytes: float = 0.0   # routed expert param bytes
+
+    def comm_model(self) -> LMCommModel:
+        act = self.global_batch * self.seq_len * self.d_model * self.dtype_bytes
+        moe_tok = (
+            self.global_batch * self.seq_len * self.topk * self.d_model
+            * self.dtype_bytes
+        )
+        return LMCommModel(
+            param_bytes=self.param_count * 4.0,   # fp32 grads all-reduced
+            act_bytes_per_layer=float(act),
+            n_layers=self.n_layers,
+            moe_param_bytes=self.ffn_mult_bytes,
+            moe_tokens_bytes=float(moe_tok),
+            n_moe_layers=self.n_moe_layers,
+        )
+
+
+def plan_mesh(
+    n_chips: int,
+    wl: LMWorkload,
+    *,
+    use_ep: bool | None = None,
+    max_tp: int = 64,
+) -> MeshPlan:
+    """Pick (dp, tp[, ep]) minimizing modeled step communication.
+
+    Constraints (integrality, the paper's l_m/w_m in N analogue):
+      * dp divides global_batch;
+      * tp divides n_kv_heads (so KV heads shard evenly) and d_model;
+      * ep divides n_experts; ep and tp share the 'model' axis here, so
+        we require ep == tp for MoE archs when use_ep (experts ride the
+        model axis — one-axis EP, the deployment-standard layout).
+    """
+    model = wl.comm_model()
+    moe = wl.n_experts > 0 if use_ep is None else use_ep
+    k = 2
+    best: tuple[float, tuple[int, ...]] | None = None
+    considered = 0
+    for f in enumerate_factorizations(n_chips, k):
+        dp, tp = f
+        considered += 1
+        if tp > max_tp or dp > wl.global_batch:
+            continue
+        if wl.global_batch % dp != 0:
+            continue
+        if tp > 1 and (wl.n_heads % tp != 0 or wl.d_model % tp != 0):
+            continue
+        ep = tp if (moe and wl.n_experts % tp == 0) else 1
+        cost = model.step_volume(dp, tp, ep)
+        key = (cost, f)
+        if best is None or key < best:
+            best = key
+    if best is None:
+        raise ValueError(f"no feasible (dp, tp) factorization of {n_chips}")
+    dp, tp = best[1]
+    ep = tp if (moe and wl.n_experts % tp == 0) else 1
+    return MeshPlan(dp=dp, tp=tp, ep=ep, step_comm_bytes=best[0],
+                    candidates_considered=considered)
+
+
+def plan_report(n_chips: int, wl: LMWorkload) -> str:
+    """Human-readable planning table (used by examples/)."""
+    model = wl.comm_model()
+    rows = []
+    for f in sorted(enumerate_factorizations(n_chips, 2)):
+        dp, tp = f
+        if wl.global_batch % dp or (tp > 1 and wl.n_heads % tp):
+            continue
+        ep = tp if wl.n_experts and wl.n_experts % tp == 0 else 1
+        rows.append((model.step_volume(dp, tp, ep), dp, tp, ep))
+    rows.sort()
+    lines = [f"{'bytes/step':>14}  {'dp':>5} {'tp':>4} {'ep':>4}"]
+    for cost, dp, tp, ep in rows[:12]:
+        lines.append(f"{cost:14.3e}  {dp:5d} {tp:4d} {ep:4d}")
+    return "\n".join(lines)

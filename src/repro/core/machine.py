@@ -1,0 +1,87 @@
+"""Hierarchical machine model — the Mapple ``Machine(GPU)`` abstraction.
+
+The paper models a machine as a multi-dimensional processor space
+(e.g. nodes x GPUs-per-node). On TPU the analogous hierarchy is
+pods x chips (with chips arranged in an ICI torus inside a pod and a
+slower DCI fabric between pods). :func:`Machine` returns the *root*
+:class:`~repro.core.pspace.ProcSpace` on which all transformation
+primitives operate.
+
+Hardware constants are TPU v5e per the assignment:
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.pspace import ProcSpace
+
+# ----------------------------------------------------------------- constants
+PEAK_FLOPS_BF16 = 197e12        # per chip, bf16
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW_PER_LINK = 50e9          # bytes/s per link (intra-pod)
+ICI_LINKS_PER_CHIP = 4          # 2D torus in v5e pods
+DCI_BW_PER_CHIP = 6.0e9         # bytes/s per chip cross-pod (modeled)
+HBM_BYTES = 16 * 2**30          # 16 GiB per v5e chip
+
+# Processor "kinds" (the paper's Machine(GPU) / Machine(CPU)).
+GPU = "tpu"     # accelerator chips -- named GPU for paper fidelity
+TPU = "tpu"
+CPU = "cpu"     # host cores (offload target)
+
+# Memory kinds (paper's FBMEM / ZCMEM / SYSMEM -> TPU memory spaces).
+FBMEM = "device"         # HBM
+ZCMEM = "pinned_host"    # host memory visible to the device
+SYSMEM = "unpinned_host"
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineSpec:
+    """Physical description of the target machine."""
+
+    shape: tuple[int, ...]                 # e.g. (2, 256) pods x chips
+    level_names: tuple[str, ...]           # e.g. ("pod", "chip")
+    kind: str = TPU
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW_PER_LINK
+    ici_links: int = ICI_LINKS_PER_CHIP
+    dci_bw: float = DCI_BW_PER_CHIP
+    hbm_bytes: int = HBM_BYTES
+
+    @property
+    def nprocs(self) -> int:
+        out = 1
+        for s in self.shape:
+            out *= s
+        return out
+
+    def link_bw(self, level: int) -> float:
+        """Bandwidth of the interconnect at hierarchy level (0 = outermost)."""
+        return self.dci_bw if level == 0 and len(self.shape) > 1 else self.ici_bw
+
+
+# Canonical machines used across the repo.
+V5E_POD = MachineSpec(shape=(16, 16), level_names=("data", "model"))
+V5E_TWO_PODS = MachineSpec(shape=(2, 16, 16), level_names=("pod", "data", "model"))
+PAPER_CLUSTER = MachineSpec(
+    shape=(2, 4), level_names=("node", "gpu"), kind=GPU,
+)  # the paper's running example: 2 nodes x 4 V100s
+
+
+def Machine(kind: str = TPU, spec: MachineSpec | None = None,
+            shape: Sequence[int] | None = None) -> ProcSpace:
+    """The paper's ``Machine(GPU)`` entry point.
+
+    Returns the root processor space. Defaults to the paper's running
+    2-node x 4-GPU example so DSL snippets from the paper run verbatim;
+    production code passes an explicit spec or shape.
+    """
+    if shape is not None:
+        shp = tuple(int(s) for s in shape)
+    elif spec is not None:
+        shp = spec.shape
+    else:
+        shp = PAPER_CLUSTER.shape
+    return ProcSpace(shp, shp)

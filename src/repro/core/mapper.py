@@ -1,0 +1,190 @@
+"""Mapping functions and the Mapper object (paper Figs. 3, 4, 7, 12).
+
+A *mapping function* takes an iteration point and the iteration space and
+returns a :class:`Processor` (root coordinates). A :class:`Mapper` bundles
+the transformed processor space(s) with the function, and can evaluate the
+full iteration grid into a device-assignment array (what the JAX
+translation layer consumes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.pspace import ProcSpace, Processor
+from repro.core.tuples import Tup
+
+MapFn = Callable[[Tup, Tup], Processor]
+
+
+@dataclasses.dataclass
+class Mapper:
+    """A named index mapping: iteration space -> processor space."""
+
+    name: str
+    fn: MapFn
+
+    def __call__(self, ipoint: Sequence[int], ispace: Sequence[int]) -> Processor:
+        return self.fn(Tup(ipoint), Tup(ispace))
+
+    # -------------------------------------------------------------- analysis
+    def assignment_grid(self, ispace: Sequence[int]) -> np.ndarray:
+        """Flat device id for every iteration point; shape = ispace."""
+        ispace_t = Tup(ispace)
+        out = np.empty(tuple(ispace), dtype=np.int64)
+        for pt in itertools.product(*(range(s) for s in ispace)):
+            out[pt] = self.fn(Tup(pt), ispace_t).flat
+        return out
+
+    def is_bijective_on(self, ispace: Sequence[int], nprocs: int) -> bool:
+        grid = self.assignment_grid(ispace)
+        return grid.size == nprocs and len(np.unique(grid)) == nprocs
+
+    def tile_permutation(self, ispace: Sequence[int], nprocs: int) -> np.ndarray:
+        """Row-major tile order -> device id permutation (must be bijective).
+
+        This is the object the JAX translation uses to build the Mesh: JAX
+        assigns block i of a sharded axis to mesh position i, so realizing an
+        arbitrary Mapple map means permuting the device list.
+        """
+        grid = self.assignment_grid(ispace)
+        flat = grid.reshape(-1)
+        if len(np.unique(flat)) != nprocs or flat.size != nprocs:
+            raise ValueError(
+                f"mapper {self.name} is not a bijection from {tuple(ispace)} "
+                f"onto {nprocs} processors; cannot realize as a mesh permutation"
+            )
+        return flat
+
+
+# ------------------------------------------------------------ Fig. 7 library
+def block_mapper(m: ProcSpace, name: str = "block") -> Mapper:
+    """blockND: idx = ipoint * m.size / ispace (Fig. 3 / Fig. 7)."""
+
+    def fn(ipoint: Tup, ispace: Tup) -> Processor:
+        idx = ipoint * m.size / ispace
+        return m[tuple(idx)]
+
+    return Mapper(name, fn)
+
+
+def cyclic_mapper(m: ProcSpace, name: str = "cyclic") -> Mapper:
+    """cyclicND: idx = ipoint % m.size."""
+
+    def fn(ipoint: Tup, ispace: Tup) -> Processor:
+        idx = ipoint % m.size
+        return m[tuple(idx)]
+
+    return Mapper(name, fn)
+
+
+def block_cyclic_mapper(m: ProcSpace, name: str = "blockcyclic") -> Mapper:
+    """block-cyclic: idx = ipoint / m.size % m.size (Fig. 7)."""
+
+    def fn(ipoint: Tup, ispace: Tup) -> Processor:
+        idx = ipoint / m.size % m.size
+        return m[tuple(idx)]
+
+    return Mapper(name, fn)
+
+
+def linear_cyclic_mapper(m2d: ProcSpace, name: str = "linearCyclic") -> Mapper:
+    """Fig. 4: merge the 2D space to 1D, round-robin the linearized point."""
+    m1 = m2d.merge(0, 1)
+
+    def fn(ipoint: Tup, ispace: Tup) -> Processor:
+        linearized = ipoint.linearize(ispace)
+        return m1[(linearized % m1.size[0],)]
+
+    return Mapper(name, fn)
+
+
+# --------------------------------------------------------- Fig. 12 primitives
+def block_primitive(ipoint: Tup, ispace: Tup, psize: Tup, dim1: int, dim2: int) -> int:
+    return ipoint[dim1] * psize[dim2] // ispace[dim1]
+
+
+def cyclic_primitive(ipoint: Tup, ispace: Tup, psize: Tup, dim1: int, dim2: int) -> int:
+    return ipoint[dim1] % psize[dim2]
+
+
+def hierarchical_block_mapper(
+    m2d: ProcSpace, ispace: Sequence[int], name: str = "hierarchical_block"
+) -> Mapper:
+    """Fig. 12 hierarchical_block{2,3}D, generalized to any rank.
+
+    decompose the node dim against the iteration space, then decompose the
+    per-node processor dim against the *per-node* sub iteration space; block
+    over the node factors, cyclic over the intra-node factors.
+    """
+    k = len(ispace)
+    m_nodes = m2d.decompose(0, ispace)                   # k node factors + gpu dim
+    node_factors = Tup(m_nodes.shape[:k])
+    sub_ispace = Tup(ispace) / node_factors              # per-node sub space
+    m_full = m_nodes.decompose(k, tuple(sub_ispace))     # + k gpu factors
+    psize = m_full.size
+
+    def fn(ipoint: Tup, ispace_t: Tup) -> Processor:
+        upper = tuple(
+            block_primitive(ipoint, ispace_t, psize, i, i) for i in range(k)
+        )
+        lower = tuple(
+            cyclic_primitive(ipoint, ispace_t, psize, i, i + k) for i in range(k)
+        )
+        return m_full[upper + lower]
+
+    return Mapper(name, fn)
+
+
+def linearize_cyclic_mapper(m2d: ProcSpace, name: str = "linearize_cyclic") -> Mapper:
+    """Fig. 12 Solomonik's function 2: column-major linearize, cyclic over
+    node then gpu dims of the original 2D space."""
+
+    def fn(ipoint: Tup, ispace: Tup) -> Processor:
+        linearized = (
+            ipoint[0]
+            + ispace[0] * ipoint[1]
+            + ispace[0] * ispace[1] * (ipoint[2] if len(ipoint) > 2 else 0)
+        )
+        node_idx = linearized % m2d.size[0]
+        gpu_idx = (linearized // m2d.size[0]) % m2d.size[1]
+        return m2d[(node_idx, gpu_idx)]
+
+    return Mapper(name, fn)
+
+
+def special_linearize3d_mapper(m2d: ProcSpace, name: str = "special_linearize3D") -> Mapper:
+    """Fig. 12 COSMA mapper: decompose nodes as equally as possible, then
+    linearize with the resulting grid strides, cyclic over nodes."""
+    m5 = m2d.decompose(0, (1, 1, 1))  # equal split (all lengths equal)
+
+    def fn(ipoint: Tup, ispace: Tup) -> Processor:
+        gx = m5.size[2]
+        gy = m5.size[1]
+        linearized = ipoint[0] + ipoint[1] * gx + ipoint[2] * gx * gy
+        return m2d[(linearized % m2d.size[0], 0)]
+
+    return Mapper(name, fn)
+
+
+def conditional_linearize3d_mapper(
+    m2d: ProcSpace, name: str = "conditional_linearize3D"
+) -> Mapper:
+    """Fig. 12 Johnson's mapper: stride by the larger of ispace[0]/ispace[2]."""
+
+    def fn(ipoint: Tup, ispace: Tup) -> Processor:
+        grid_size = ispace[0] if ispace[0] > ispace[2] else ispace[2]
+        linearized = (
+            ipoint[0] + ipoint[1] * grid_size + ipoint[2] * grid_size * grid_size
+        )
+        return m2d[(linearized % m2d.size[0], 0)]
+
+    return Mapper(name, fn)
+
+
+def transformed_block_mapper(m: ProcSpace, name: str) -> Mapper:
+    """block over an arbitrarily transformed space (block1D_x etc.)."""
+    return block_mapper(m, name)

@@ -1,0 +1,276 @@
+"""Processor-space algebra: the core of the Mapple DSL.
+
+Implements the transformation primitives of Fig. 6 of the paper
+("Mapple: A DSL for Mapping Distributed Heterogeneous Parallel Programs"):
+
+    split(i, d)            -- split dim i into (d, s_i/d)
+    merge(p, q)            -- fuse dims p and q into one dim at p
+    swap(p, q)             -- exchange two dims
+    slice(i, low, high)    -- restrict dim i to [low, high) with offset
+    decompose(i, T)        -- optimally factor dim i against iteration extents T
+
+Each transformed :class:`ProcSpace` knows how to map its own indices back to
+the *root* space indices (the machine's physical coordinates), exactly as the
+paper defines the semantics: "mappings from the indices of the transformed
+processor space to the indices of the original processor space".
+
+All spaces are immutable; primitives return new spaces sharing the same root.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+from repro.core.tuples import Tup
+
+Index = tuple[int, ...]
+
+
+def _prod(xs: Sequence[int]) -> int:
+    return math.prod(xs) if xs else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Processor:
+    """A concrete processor: coordinates in the root (physical) space.
+
+    ``coords`` are the root-space coordinates; ``flat`` is the row-major
+    linearization, which the JAX translation layer uses as the device id.
+    """
+
+    coords: tuple[int, ...]
+    root_shape: tuple[int, ...]
+
+    @property
+    def flat(self) -> int:
+        fid = 0
+        for c, s in zip(self.coords, self.root_shape):
+            fid = fid * s + c
+        return fid
+
+    @property
+    def node(self) -> int:
+        """First root coordinate (node / pod index in a 2-level machine)."""
+        return self.coords[0]
+
+    @property
+    def proc(self) -> int:
+        """Last root coordinate (processor-within-node in a 2-level machine)."""
+        return self.coords[-1]
+
+    def __iter__(self):
+        return iter(self.coords)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"Processor{self.coords}"
+
+
+class ProcSpace:
+    """An n-dimensional view of a machine's processors.
+
+    ``shape``   -- extents of this (possibly transformed) view.
+    ``to_root`` -- function mapping an index in this view to root coordinates.
+    """
+
+    def __init__(
+        self,
+        shape: Sequence[int],
+        root_shape: Sequence[int],
+        to_root: Callable[[Index], Index] | None = None,
+    ) -> None:
+        self._shape = tuple(int(s) for s in shape)
+        self._root_shape = tuple(int(s) for s in root_shape)
+        if any(s <= 0 for s in self._shape):
+            raise ValueError(f"non-positive extent in shape {self._shape}")
+        self._to_root = to_root if to_root is not None else (lambda idx: idx)
+
+    # ------------------------------------------------------------------ views
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self._shape
+
+    @property
+    def root_shape(self) -> tuple[int, ...]:
+        return self._root_shape
+
+    @property
+    def ndim(self) -> int:
+        return len(self._shape)
+
+    @property
+    def size(self) -> Tup:
+        """Extents as a :class:`Tup` supporting elementwise arithmetic.
+
+        Mirrors the paper's ``m.size`` (e.g. ``ipoint * m.size / ispace``).
+        """
+        return Tup(self._shape)
+
+    @property
+    def nprocs(self) -> int:
+        return _prod(self._shape)
+
+    def __len__(self) -> int:
+        return self._shape[0]
+
+    # ------------------------------------------------------------ index logic
+    def _check_index(self, idx: Index) -> None:
+        if len(idx) != self.ndim:
+            raise IndexError(
+                f"index {idx} has rank {len(idx)}, space has rank {self.ndim}"
+            )
+        for a, s in zip(idx, self._shape):
+            if not 0 <= a < s:
+                raise IndexError(f"index {idx} out of bounds for shape {self._shape}")
+
+    def to_root(self, idx: Index) -> Index:
+        idx = tuple(int(a) for a in idx)
+        self._check_index(idx)
+        return self._to_root(idx)
+
+    def __getitem__(self, key):
+        """Index the space.
+
+        * full-rank int tuple (or ``m[*idx]`` unpacking / a :class:`Tup`)
+          -> :class:`Processor` at those coordinates;
+        * a ``slice`` -> :class:`Tup` of the sliced extents (the paper's
+          ``m_4d[:-1]`` idiom, which coerces a space to its size tuple);
+        * a single int on a 1-D space -> :class:`Processor`;
+        * a single int on an n-D space -> that dimension's extent (the
+          paper's ``pspace[dim]`` idiom in helper functions).
+        """
+        if isinstance(key, slice):
+            return Tup(self._shape[key])
+        if isinstance(key, Tup):
+            key = tuple(key)
+        if isinstance(key, (int,)) and not isinstance(key, bool):
+            if self.ndim == 1:
+                key = (key,)
+            else:
+                return self._shape[key]
+        if isinstance(key, tuple):
+            idx = tuple(int(k) for k in key)
+            root = self.to_root(idx)
+            return Processor(root, self._root_shape)
+        raise TypeError(f"cannot index ProcSpace with {key!r}")
+
+    # ------------------------------------------------------------- primitives
+    def split(self, i: int, d: int) -> "ProcSpace":
+        """Fig. 6: m' = m.split(i, d); shape (..., d, s_i/d, ...).
+
+        Index semantics: ``m'[.., a_i, a_{i+1}, ..] = m[.., a_i + a_{i+1}*d, ..]``
+        (the first new dim is the fast-varying component of the original dim).
+        """
+        s = self._shape
+        if not 0 <= i < self.ndim:
+            raise IndexError(f"split dim {i} out of range for rank {self.ndim}")
+        if d <= 0 or s[i] % d != 0:
+            raise ValueError(f"split factor {d} does not divide extent {s[i]}")
+        new_shape = s[:i] + (d, s[i] // d) + s[i + 1:]
+        parent = self._to_root
+
+        def to_root(a: Index) -> Index:
+            b = a[:i] + (a[i] + a[i + 1] * d,) + a[i + 2:]
+            return parent(b)
+
+        return ProcSpace(new_shape, self._root_shape, to_root)
+
+    def merge(self, p: int, q: int) -> "ProcSpace":
+        """Fig. 6: fuse dims p and q into a single dim of extent s_p*s_q at p.
+
+        Index semantics:
+        ``m'[.., a_p, ..] = m[.., a_p mod s_p, .., floor(a_p / s_p), ..]``
+        so that ``merge`` is the exact inverse of ``split`` (proved in the
+        paper Sec. 3.3 and property-tested in tests/test_pspace.py).
+        """
+        if p == q:
+            raise ValueError("merge requires two distinct dimensions")
+        if p > q:
+            # Normalize: merged dim lands at min(p, q); the paper writes p < q.
+            raise ValueError("merge expects p < q (merged dim lands at p)")
+        s = self._shape
+        if not (0 <= p < self.ndim and 0 <= q < self.ndim):
+            raise IndexError(f"merge dims ({p},{q}) out of range")
+        sp, sq = s[p], s[q]
+        new_shape = s[:p] + (sp * sq,) + s[p + 1:q] + s[q + 1:]
+        parent = self._to_root
+
+        def to_root(a: Index) -> Index:
+            ap = a[p]
+            lo, hi = ap % sp, ap // sp
+            # Rebuild the pre-merge index: dims < q keep their positions
+            # (with the fused value split back), dims >= q shift right by one.
+            b = list(a[:p]) + [lo] + list(a[p + 1:q]) + [hi] + list(a[q:])
+            # a has rank n-1; the slice a[p+1:q] are the dims strictly between
+            # p and q, and a[q:] are the post-q dims (shifted left by one in a).
+            return parent(tuple(b))
+
+        return ProcSpace(new_shape, self._root_shape, to_root)
+
+    def swap(self, p: int, q: int) -> "ProcSpace":
+        """Fig. 6: exchange dims p and q."""
+        s = list(self._shape)
+        if not (0 <= p < self.ndim and 0 <= q < self.ndim):
+            raise IndexError(f"swap dims ({p},{q}) out of range")
+        s[p], s[q] = s[q], s[p]
+        parent = self._to_root
+
+        def to_root(a: Index) -> Index:
+            b = list(a)
+            b[p], b[q] = a[q], a[p]
+            return parent(tuple(b))
+
+        return ProcSpace(tuple(s), self._root_shape, to_root)
+
+    def slice(self, i: int, low: int, high: int) -> "ProcSpace":
+        """Fig. 6: restrict dim i to the half-open range [low, high).
+
+        Index semantics: ``m'[.., a_i, ..] = m[.., a_i + low, ..]``.
+        """
+        s = self._shape
+        if not 0 <= i < self.ndim:
+            raise IndexError(f"slice dim {i} out of range")
+        if not (0 <= low < high <= s[i]):
+            raise ValueError(f"slice bounds [{low},{high}) invalid for extent {s[i]}")
+        new_shape = s[:i] + (high - low,) + s[i + 1:]
+        parent = self._to_root
+
+        def to_root(a: Index) -> Index:
+            b = a[:i] + (a[i] + low,) + a[i + 1:]
+            return parent(b)
+
+        return ProcSpace(new_shape, self._root_shape, to_root)
+
+    def decompose(self, i: int, lengths, *, objective=None, halo=None) -> "ProcSpace":
+        """Sec. 4: optimally factor dim i against iteration extents ``lengths``.
+
+        Splits extent d_i into k = len(lengths) factors (d_1..d_k) minimizing
+        the communication-volume objective  sum_m d_m / l_m  (or a caller-
+        supplied objective, e.g. anisotropic halo weights per Sec. 7.2),
+        then applies the equivalent sequence of ``split`` transformations:
+
+            m_{n+1} = m_n.split(i + n - 1, d_{i_n})  for 1 <= n < k.
+        """
+        from repro.core.decompose import optimal_factorization
+
+        lengths = tuple(int(x) for x in lengths)
+        factors = optimal_factorization(
+            self._shape[i], lengths, objective=objective, halo=halo
+        )
+        return self.decompose_with(i, factors)
+
+    def decompose_with(self, i: int, factors: Sequence[int]) -> "ProcSpace":
+        """Apply a pre-computed factorization (the split-sequence expansion)."""
+        factors = tuple(int(f) for f in factors)
+        if _prod(factors) != self._shape[i]:
+            raise ValueError(
+                f"factors {factors} do not multiply to extent {self._shape[i]}"
+            )
+        space = self
+        for n, f in enumerate(factors[:-1]):
+            space = space.split(i + n, f)
+        return space
+
+    # ------------------------------------------------------------------ misc
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"ProcSpace(shape={self._shape}, root={self._root_shape})"

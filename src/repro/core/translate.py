@@ -1,0 +1,146 @@
+"""Translation layer: Mapple mappers -> JAX SPMD artifacts (paper Sec. 5).
+
+Legion realizes a mapper by invoking SHARD/MAP callbacks per task launch.
+XLA is SPMD-static, so the faithful TPU translation pre-evaluates the
+mapping function over the whole tile grid *once* and bakes the result into
+the `jax.sharding.Mesh`:
+
+  * JAX assigns block ``i`` of a sharded axis to mesh position ``i``;
+  * therefore ANY bijective Mapple tile->processor map is realized by
+    permuting the flat device list before reshaping it into the mesh.
+
+Block distributions are identity permutations; cyclic / hierarchical /
+systolic (Cannon, Solomonik) maps become non-trivial permutations. The
+remaining Mapple directives translate to:
+
+  Region      -> NamedSharding memory_kind ('device' | 'pinned_host')
+  Layout      -> operand dim-order permutation hints
+  GarbageCollect -> buffer donation sets (donate_argnums)
+  Backpressure   -> bounded async dispatch depth in the step loop
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.mapper import Mapper
+from repro.core.machine import FBMEM
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutSpec:
+    """The paper's Layout directive: ordering + alignment per operand."""
+
+    order: str = "C"          # "C" (row-major) | "F" (column-major)
+    alignment: int = 128      # bytes; TPU lanes want 128-element tiles
+    soa: bool = True          # Struct-of-Arrays preferred on TPU
+
+
+@dataclasses.dataclass
+class MappingPlan:
+    """Everything the launcher needs to execute a step under a mapper."""
+
+    mesh: Any                                    # jax.sharding.Mesh
+    axis_names: tuple[str, ...]
+    in_specs: dict[str, Any]                     # operand -> PartitionSpec
+    out_specs: dict[str, Any]
+    memory_kinds: dict[str, str] = dataclasses.field(default_factory=dict)
+    layouts: dict[str, LayoutSpec] = dataclasses.field(default_factory=dict)
+    donate: tuple[str, ...] = ()
+    backpressure: int = 2                        # max in-flight steps
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def sharding(self, operand: str):
+        """NamedSharding for an operand, honoring its Region memory kind."""
+        import jax
+
+        spec = self.in_specs.get(operand) or self.out_specs.get(operand)
+        kind = self.memory_kinds.get(operand, FBMEM)
+        try:
+            return jax.sharding.NamedSharding(self.mesh, spec, memory_kind=kind)
+        except (ValueError, TypeError):
+            # Backend without memory-kind support (CPU tests): fall back.
+            return jax.sharding.NamedSharding(self.mesh, spec)
+
+
+def device_permutation(mapper: Mapper, tile_grid: Sequence[int], nprocs: int
+                       ) -> np.ndarray:
+    """Flat tile order -> device id (bijective), from the mapping function."""
+    return mapper.tile_permutation(tile_grid, nprocs)
+
+
+def mesh_from_mapper(
+    mapper: Mapper,
+    tile_grid: Sequence[int],
+    axis_names: Sequence[str],
+    devices: Sequence[Any] | None = None,
+):
+    """Build a Mesh whose device order realizes ``mapper`` (Sec. 5 analogue).
+
+    ``tile_grid`` is the processor-grid the computation is tiled over (one
+    tile per device); ``mapper`` maps tile coordinates to physical devices.
+    """
+    import jax
+
+    if devices is None:
+        devices = jax.devices()
+    tile_grid = tuple(int(t) for t in tile_grid)
+    n = int(np.prod(tile_grid))
+    if n != len(devices):
+        raise ValueError(
+            f"tile grid {tile_grid} needs {n} devices, got {len(devices)}"
+        )
+    perm = device_permutation(mapper, tile_grid, n)
+    dev_arr = np.asarray(devices, dtype=object)[perm].reshape(tile_grid)
+    return jax.sharding.Mesh(dev_arr, tuple(axis_names))
+
+
+def owned_tiles(mapper: Mapper, ispace: Sequence[int], nprocs: int
+                ) -> dict[int, list[tuple[int, ...]]]:
+    """Many-to-one case: tiles owned by each device (cyclic distributions).
+
+    Used by shard_map bodies that iterate over their owned tiles when the
+    iteration grid is larger than the processor grid.
+    """
+    grid = mapper.assignment_grid(ispace)
+    out: dict[int, list[tuple[int, ...]]] = {d: [] for d in range(nprocs)}
+    for pt in np.ndindex(*grid.shape):
+        out[int(grid[pt])].append(pt)
+    return out
+
+
+def plan_from_program(
+    program,                      # repro.core.dsl.MapperProgram
+    task: str,
+    tile_grid: Sequence[int],
+    axis_names: Sequence[str],
+    operand_specs: Mapping[str, Any],
+    out_operand_specs: Mapping[str, Any],
+    devices: Sequence[Any] | None = None,
+) -> MappingPlan:
+    """Assemble a MappingPlan for ``task`` from a parsed Mapple program."""
+    mapper_name = program.index_task_maps.get(task)
+    if mapper_name is None:
+        raise KeyError(f"no IndexTaskMap for task {task!r}")
+    mapper = program.mappers[mapper_name]
+    mesh = mesh_from_mapper(mapper, tile_grid, axis_names, devices)
+    memory_kinds = {
+        arg: mem for (t, arg), (_, mem) in program.regions.items() if t == task
+    }
+    layouts = {
+        arg: spec for (t, arg), spec in program.layouts.items() if t == task
+    }
+    donate = tuple(arg for (t, arg) in program.garbage_collect if t == task)
+    return MappingPlan(
+        mesh=mesh,
+        axis_names=tuple(axis_names),
+        in_specs=dict(operand_specs),
+        out_specs=dict(out_operand_specs),
+        memory_kinds=memory_kinds,
+        layouts=layouts,
+        donate=donate,
+        backpressure=program.backpressure.get(task, 2),
+        meta={"mapper": mapper_name, "task": task},
+    )

@@ -1,0 +1,125 @@
+"""Elementwise integer tuple arithmetic — the paper's ``Tuple`` type.
+
+Mapple mapping functions are written with tuple arithmetic, e.g.::
+
+    idx = ipoint * m.size / ispace      # block2D  (Fig. 7)
+    idx = ipoint % m.size               # cyclic2D
+    idx = ipoint / m.size % m.size      # block-cyclic
+
+All operators are elementwise; division is floor division (the paper's
+index arithmetic is over naturals). Scalars broadcast.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence, Union
+
+Scalar = int
+TupLike = Union["Tup", Sequence[int], Scalar]
+
+
+def _coerce(other: TupLike, n: int) -> tuple[int, ...]:
+    if isinstance(other, Tup):
+        vals = other._vals
+    elif isinstance(other, (list, tuple)):
+        vals = tuple(int(v) for v in other)
+    elif isinstance(other, int):
+        return (int(other),) * n
+    else:
+        # ProcSpace coerces via its .size (duck-typed to avoid circular import)
+        size = getattr(other, "size", None)
+        if isinstance(size, Tup):
+            vals = size._vals
+        else:
+            raise TypeError(f"cannot coerce {other!r} to Tup")
+    if len(vals) != n:
+        raise ValueError(f"rank mismatch: {n} vs {len(vals)}")
+    return vals
+
+
+class Tup:
+    """Immutable integer tuple with elementwise arithmetic."""
+
+    __slots__ = ("_vals",)
+
+    def __init__(self, vals: Iterable[int]) -> None:
+        object.__setattr__(self, "_vals", tuple(int(v) for v in vals))
+
+    # -------------------------------------------------------------- protocol
+    def __iter__(self):
+        return iter(self._vals)
+
+    def __len__(self) -> int:
+        return len(self._vals)
+
+    def __getitem__(self, key):
+        if isinstance(key, slice):
+            return Tup(self._vals[key])
+        return self._vals[key]
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, Tup):
+            return self._vals == other._vals
+        if isinstance(other, tuple):
+            return self._vals == other
+        return NotImplemented
+
+    def __hash__(self) -> int:
+        return hash(self._vals)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"Tup{self._vals}"
+
+    # ------------------------------------------------------------ arithmetic
+    def _zip(self, other: TupLike, op) -> "Tup":
+        o = _coerce(other, len(self._vals))
+        return Tup(op(a, b) for a, b in zip(self._vals, o))
+
+    def __mul__(self, other):
+        return self._zip(other, lambda a, b: a * b)
+
+    __rmul__ = __mul__
+
+    def __add__(self, other):
+        return self._zip(other, lambda a, b: a + b)
+
+    __radd__ = __add__
+
+    def __sub__(self, other):
+        return self._zip(other, lambda a, b: a - b)
+
+    def __rsub__(self, other):
+        o = _coerce(other, len(self._vals))
+        return Tup(b - a for a, b in zip(self._vals, o))
+
+    def __floordiv__(self, other):
+        return self._zip(other, lambda a, b: a // b)
+
+    # The paper writes `/` for natural-number division.
+    __truediv__ = __floordiv__
+
+    def __rfloordiv__(self, other):
+        o = _coerce(other, len(self._vals))
+        return Tup(b // a for a, b in zip(self._vals, o))
+
+    __rtruediv__ = __rfloordiv__
+
+    def __mod__(self, other):
+        return self._zip(other, lambda a, b: a % b)
+
+    # ----------------------------------------------------------- conveniences
+    def prod(self) -> int:
+        out = 1
+        for v in self._vals:
+            out *= v
+        return out
+
+    def linearize(self, extents: TupLike) -> int:
+        """Row-major linearization of this point within ``extents``."""
+        ex = _coerce(extents, len(self._vals))
+        out = 0
+        for v, e in zip(self._vals, ex):
+            out = out * e + v
+        return out
+
+    def as_tuple(self) -> tuple[int, ...]:
+        return self._vals

@@ -1,0 +1,2 @@
+"""Data pipeline substrate."""
+from repro.data.pipeline import DataConfig, SyntheticEmbeddings, SyntheticTokens, make_pipeline

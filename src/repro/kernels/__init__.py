@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+<name>.py   -- pl.pallas_call + explicit BlockSpec VMEM tiling
+ops.py      -- jit'd public wrappers (interpret mode on CPU)
+ref.py      -- pure-jnp oracles (the allclose targets)
+"""
+from repro.kernels import ops, ref  # noqa: F401

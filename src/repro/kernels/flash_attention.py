@@ -1,0 +1,116 @@
+"""Flash attention (causal, optional sliding window) — Pallas TPU kernel.
+
+Adaptation note (DESIGN.md): the CUDA flash algorithm tiles over SM shared
+memory with warp-level softmax reductions; the TPU version tiles over VMEM
+with the grid's sequential minor axis playing the role of the KV loop, fp32
+running max / denominator held in VMEM scratch across grid steps, and the
+MXU consuming (bq, d) x (d, bk) tiles. GQA is handled by folding the group
+into the query-head grid axis so the same KV tile serves all group members.
+
+Layout: q (BH, S, d), k/v (BKV, S, d) with BH = B*H, BKV = B*Kv.
+Grid: (BH, S/bq, S/bk) — kv axis innermost (sequential accumulation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, d_ref, *,
+                  scale: float, window: int, n_k: int, bq: int, bk: int,
+                  causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        d_ref[...] = jnp.zeros_like(d_ref)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    run = True
+    if causal:
+        # Skip fully-masked blocks (the whole block above the diagonal).
+        run = (ki * bk) <= (qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0]                                     # (bq, d)
+        k = k_ref[0]                                     # (bk, d)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                        # (bq, bk)
+        ok = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            ok = ok & (q_pos >= k_pos)
+        if window > 0:
+            ok = ok & (q_pos - k_pos < window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        d_ref[...] = d_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        denom = jnp.maximum(d_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,           # (BH, S, d)
+    k: jax.Array,           # (BH, S, d)  (pre-expanded GQA)
+    v: jax.Array,
+    *,
+    scale: float | None = None,
+    window: int = 0,
+    causal: bool = True,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, S, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    bq, bk = min(bq, S), min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    grid = (BH, S // bq, S // bk)
+    kern = functools.partial(
+        _flash_kernel, scale=scale, window=window, n_k=grid[2],
+        bq=bq, bk=bk, causal=causal,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

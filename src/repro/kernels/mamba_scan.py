@@ -1,0 +1,90 @@
+"""Mamba-1 selective-scan — Pallas TPU kernel (hymba's SSM hot spot).
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t        (per (di, n))
+    y_t = sum_n h_t[:, n] * C_t[n]  + D * x_t (residual added by caller)
+
+Adaptation note (DESIGN.md): the CUDA kernel parallelizes channels over
+threads with state in registers; on TPU the state (di, n) lives in VMEM
+scratch persisting across the sequential time-chunk grid axis, and the
+(B)-batch axis provides the parallel grid dimension. Unlike WKV6 the decay
+is per-(channel, state) so no chunk-matmul collapse exists (Mamba-2/SSD
+restricts decay to per-head scalars to enable it) — the win over the jnp
+scan is state residency in VMEM, not parallelization over time.
+
+Layout: xs/dt (B, T, di); Bs/Cs (B, T, n); A (di, n).
+Outputs: y (B, T, di), final state (B, di, n).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BT = 64
+
+
+def _mamba_kernel(xs_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, sout_ref,
+                  s_ref, *, bt: int, n_t: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    A = a_ref[...]                                      # (di, n)
+
+    def step(t, _):
+        x_t = xs_ref[0, t]                              # (di,)
+        dt_t = dt_ref[0, t]                             # (di,)
+        B_t = b_ref[0, t]                               # (n,)
+        C_t = c_ref[0, t]                               # (n,)
+        dA = jnp.exp(dt_t[:, None] * A)                 # (di, n)
+        dBx = (dt_t * x_t)[:, None] * B_t[None, :]      # (di, n)
+        h = dA * s_ref[...] + dBx
+        s_ref[...] = h
+        y_ref[0, t] = (h * C_t[None, :]).sum(axis=1).astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, bt, step, 0)
+
+    @pl.when(ti == n_t - 1)
+    def _flush():
+        sout_ref[0] = s_ref[...].astype(sout_ref.dtype)
+
+
+def mamba_scan_pallas(
+    xs: jax.Array, dt: jax.Array, Bs: jax.Array, Cs: jax.Array, A: jax.Array,
+    *, bt: int = DEFAULT_BT, interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,T,di), final_state (B,di,n)). Zero initial state."""
+    B, T, di = xs.shape
+    n = A.shape[1]
+    bt = min(bt, T)
+    assert T % bt == 0, (T, bt)
+    grid = (B, T // bt)
+    kern = functools.partial(_mamba_kernel, bt=bt, n_t=grid[1])
+    y, s_out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, di), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, bt, di), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, bt, n), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, bt, n), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((di, n), lambda b, t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, di), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, di, n), lambda b, t: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, di), xs.dtype),
+            jax.ShapeDtypeStruct((B, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((di, n), jnp.float32)],
+        interpret=interpret,
+    )(xs, dt, Bs, Cs, A)
+    return y, s_out

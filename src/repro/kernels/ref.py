@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def flash_attention(q, k, v, *, scale=None, window: int = 0,
+                    causal: bool = True):
+    """q/k/v: (BH, S, d) — naive softmax attention."""
+    BH, S, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    pos = jnp.arange(S)
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok = ok & (pos[:, None] >= pos[None, :])
+    if window > 0:
+        ok = ok & (pos[:, None] - pos[None, :] < window)
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def stencil(field: jax.Array) -> jax.Array:
+    """One 5-point Jacobi sweep, edge-replicate boundaries."""
+    fp = jnp.pad(field, 1, mode="edge")
+    return (0.2 * (
+        fp[1:-1, 1:-1] + fp[:-2, 1:-1] + fp[2:, 1:-1]
+        + fp[1:-1, :-2] + fp[1:-1, 2:]
+    )).astype(field.dtype)
+
+
+def wkv6(r, k, v, w, u):
+    """Sequential-scan WKV6. r/k/v/w: (BH,T,N); u: (BH,N)."""
+    BH, T, N = r.shape
+
+    def one(rb, kb, vb, wb, ub):
+        def step(s, inp):
+            r_t, k_t, v_t, w_t = inp
+            kv = k_t[:, None] * v_t[None, :]
+            y = ((s + ub[:, None] * kv) * r_t[:, None]).sum(axis=0)
+            s = w_t[:, None] * s + kv
+            return s, y
+
+        s0 = jnp.zeros((N, N), jnp.float32)
+        s, ys = jax.lax.scan(step, s0, (rb, kb, vb, wb))
+        return ys, s
+
+    y, s = jax.vmap(one)(r, k, v, w, u)
+    return y.astype(r.dtype), s
+
+
+def mamba_scan(xs, dt, Bs, Cs, A):
+    """Sequential selective scan. xs/dt: (B,T,di); Bs/Cs: (B,T,n); A: (di,n)."""
+    B, T, di = xs.shape
+    n = A.shape[1]
+
+    def one(x_b, dt_b, B_b, C_b):
+        def step(h, inp):
+            x_t, dt_t, B_t, C_t = inp
+            dA = jnp.exp(dt_t[:, None] * A)
+            h = dA * h + (dt_t * x_t)[:, None] * B_t[None, :]
+            y = (h * C_t[None, :]).sum(axis=1)
+            return h, y
+
+        h0 = jnp.zeros((di, n), jnp.float32)
+        h, ys = jax.lax.scan(step, h0, (x_b, dt_b, B_b, C_b))
+        return ys, h
+
+    y, s = jax.vmap(one)(xs, dt, Bs, Cs)
+    return y.astype(xs.dtype), s

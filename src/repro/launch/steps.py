@@ -1,0 +1,231 @@
+"""Step-function assembly for the dry-run and the real launchers.
+
+For every (arch x shape) cell this produces:
+  * the step callable (train_step / serve_step / prefill_step),
+  * abstract arguments (ShapeDtypeStructs — nothing allocated),
+  * in/out shardings pinned to the production mesh via the policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import policy as policy_mod
+from repro.launch import specs as specs_mod
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.registry import build
+from repro.training import optimizer as opt_mod
+from repro.training.loop import TrainState
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    cfg: ModelConfig
+    shape: ShapeConfig
+    step_fn: Callable
+    abstract_args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    plan: policy_mod.ShardingPlan
+
+    def lower(self):
+        # Donation (the paper's GarbageCollect directive translated):
+        # train donates the whole state; decode donates the cache.
+        donate = ()
+        if self.shape.kind == "train":
+            donate = (0,)
+        elif self.shape.kind == "decode":
+            donate = (1,)
+        jitted = jax.jit(
+            self.step_fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=donate,
+        )
+        return jitted.lower(*self.abstract_args)
+
+
+def choose_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Smallest accumulation factor whose live activation estimate fits.
+
+    Estimate per device: saved residuals (seq-sharded when SP is on) +
+    the cross-entropy logits block (vocab-sharded).
+    """
+    import math
+
+    from repro.launch.knobs import active
+
+    if active().microbatch:
+        return active().microbatch
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            dp *= mesh.shape[ax]
+    model_size = mesh.shape.get("model", 1) if hasattr(mesh.shape, "get") \
+        else dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    b_dev = max(shape.global_batch // max(dp, 1), 1)
+    sp = 16 if shape.seq_len % 16 == 0 else 1
+    budget = 4.5e9
+    for n in (1, 2, 4, 8, 16):
+        if shape.global_batch % (dp * n):
+            continue
+        bd = b_dev / n
+        resid = cfg.n_layers * bd * shape.seq_len * cfg.d_model * 2 / sp
+        logits = bd * shape.seq_len * cfg.padded_vocab * 6 / max(model_size, 1)
+        moe = 0.0
+        if cfg.n_experts:
+            # dispatch/recv/expert-act stashes per MoE layer (backward)
+            n_moe = cfg.n_layers - cfg.first_dense_layers
+            moe = 3.0 * n_moe * bd * shape.seq_len * cfg.topk \
+                * cfg.d_model * 2 / max(model_size, 1)
+        if resid + logits + moe < budget:
+            return n
+    return 16 if shape.global_batch % (dp * 16) == 0 else 1
+
+
+def _abstract_state(model, opt_cfg) -> TrainState:
+    params = model.abstract()
+    zeros_like = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t
+    )
+    return TrainState(
+        params=params,
+        opt=opt_mod.AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=zeros_like(params),
+            nu=zeros_like(params),
+        ),
+        error=None,
+    )
+
+
+def make_cell(arch: str, cfg: ModelConfig, shape: ShapeConfig, mesh,
+              *, mode: str | None = None, use_pallas: bool = False,
+              seq_shard: bool = True) -> Cell:
+    """Build the lowering cell for one (arch x shape) on ``mesh``."""
+    import math
+
+    from repro.models import sharding as act_sharding
+
+    model = build(cfg)
+    plan = policy_mod.make_plan(cfg, mesh, mode)
+    act_sharding.set_sequence_sharding(
+        "model" if (seq_shard and shape.kind in ("train", "prefill")
+                    and shape.seq_len % 16 == 0) else None
+    )
+    # FSDP: pin the per-layer weight all-gather inside the scan body so
+    # only one layer's gathered weights are live (see models/sharding.py).
+    act_sharding.set_layer_barrier(plan.mode == "fsdp")
+    # MoE dispatch groups = data shards (tokens-per-step permitting).
+    dp_total = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            dp_total *= mesh.shape[ax]
+    tokens_per_step = shape.global_batch * (
+        1 if shape.is_decode else shape.seq_len
+    )
+    act_sharding.set_moe_groups(math.gcd(dp_total, tokens_per_step))
+
+    if shape.kind == "train":
+        opt_cfg = opt_mod.AdamWConfig(total_steps=10000)
+        n_micro = choose_microbatches(cfg, shape, mesh)
+
+        def train_step(state: TrainState, batch):
+            if n_micro == 1:
+                loss, grads = jax.value_and_grad(
+                    lambda p: model.loss(p, batch, use_pallas=use_pallas)
+                )(state.params)
+            else:
+                # Gradient accumulation: scan over microbatches bounds the
+                # live activation set to one microbatch's.
+                micro = jax.tree.map(
+                    lambda x: x.reshape(
+                        (n_micro, x.shape[0] // n_micro) + x.shape[1:]
+                    ),
+                    batch,
+                )
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+                )
+
+                def micro_step(carry, mb):
+                    acc_loss, acc_g = carry
+                    loss, g = jax.value_and_grad(
+                        lambda p: model.loss(p, mb, use_pallas=use_pallas)
+                    )(state.params)
+                    acc_g = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32) / n_micro,
+                        acc_g, g,
+                    )
+                    return (acc_loss + loss / n_micro, acc_g), None
+
+                (loss, grads), _ = jax.lax.scan(
+                    micro_step, (0.0, zeros), micro
+                )
+            params, opt_state, metrics = opt_mod.update(
+                opt_cfg, grads, state.opt, state.params
+            )
+            return TrainState(params, opt_state, None), {
+                "loss": loss, **metrics,
+            }
+
+        state_abs = _abstract_state(model, opt_cfg)
+        batch_abs = specs_mod.batch_specs(cfg, shape)
+        p_sh = plan.params(model.schema)
+        state_sh = TrainState(
+            params=p_sh,
+            opt=opt_mod.AdamWState(
+                step=plan.replicated(),
+                mu=plan.opt_moments(model.schema),
+                nu=plan.opt_moments(model.schema),
+            ),
+            error=None,
+        )
+        batch_sh = plan.batch_like(batch_abs)
+        metrics_sh = {
+            "loss": plan.replicated(), "grad_norm": plan.replicated(),
+            "lr": plan.replicated(),
+        }
+        return Cell(
+            arch, cfg, shape, train_step, (state_abs, batch_abs),
+            (state_sh, batch_sh), (state_sh, metrics_sh), plan,
+        )
+
+    if shape.kind == "prefill":
+
+        def prefill_step(params, inputs):
+            return model.last_logits(params, inputs, use_pallas=use_pallas)
+
+        params_abs = model.abstract()
+        in_abs = specs_mod.prefill_specs(cfg, shape)
+        p_sh = plan.params(model.schema)
+        in_sh = plan.batch_like(in_abs)
+        out_sh = plan.replicated()
+        return Cell(
+            arch, cfg, shape, prefill_step,
+            (params_abs, in_abs["inputs"]), (p_sh, in_sh["inputs"]), out_sh,
+            plan,
+        )
+
+    # decode (decode_32k / long_500k)
+    def serve_step(params, cache, pos, token):
+        return model.decode_step(params, cache, pos, token)
+
+    params_abs = model.abstract()
+    d = specs_mod.decode_specs(cfg, shape)
+    p_sh = plan.params(model.schema)
+    cache_sh = plan.cache(d["cache"])
+    tok_sh = plan.batch_like({"t": d["token"]})["t"]
+    logits_sh = plan.batch_like({"l": jax.ShapeDtypeStruct((shape.global_batch,
+                                                            1), jnp.float32)})["l"]
+    return Cell(
+        arch, cfg, shape, serve_step,
+        (params_abs, d["cache"], d["pos"], d["token"]),
+        (p_sh, cache_sh, plan.replicated(), tok_sh),
+        (logits_sh, cache_sh),
+        plan,
+    )

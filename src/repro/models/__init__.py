@@ -1,0 +1,17 @@
+"""Model zoo: the ten assigned architectures, config-driven."""
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES
+from repro.models.registry import build
+from repro.models.params import (
+    ParamDef,
+    ShardingRules,
+    abstract_params,
+    init_params,
+    param_count,
+    param_specs,
+)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "build",
+    "ParamDef", "ShardingRules", "abstract_params", "init_params",
+    "param_count", "param_specs",
+]

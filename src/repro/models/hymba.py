@@ -1,0 +1,308 @@
+"""Hymba [arXiv:2411.13676] — hybrid-head LM: parallel attention + Mamba.
+
+Each layer runs a (sliding-window) attention head group and a Mamba (SSM)
+head group *in parallel* on the same input, normalizes each output, and
+averages them. Meta-tokens are omitted (noted in DESIGN.md): they change
+prompt handling, not the distributed mapping this repo studies.
+
+The Mamba side keeps O(1) decode state (conv tail + SSM state), and the
+attention side uses a ring-buffer SWA cache, so this arch runs long_500k.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.params import (
+    ParamDef,
+    Schema,
+    abstract_params,
+    init_params,
+    normal_init,
+    ones_init,
+    param_count,
+    zeros_init,
+)
+from repro.models.sharding import (constrain, layer_barrier,
+                                   logits_sharded, residual)
+from repro.models.transformer import attention_schema, attention_block
+
+BATCH = ("pod", "data")
+SWA_WINDOW = 1024
+DT_RANK = 48
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.d_inner or 2 * cfg.d_model
+
+
+# ------------------------------------------------------------------- mamba
+def mamba_schema(cfg: ModelConfig) -> Schema:
+    d = cfg.d_model
+    di = d_inner(cfg)
+    n = cfg.ssm_state
+    return {
+        "w_in": ParamDef((d, 2 * di), ("embed", "ffn")),
+        "conv": ParamDef((cfg.conv_width, di), ("conv", "ffn"),
+                         normal_init(0.1)),
+        "w_bc": ParamDef((di, 2 * n), ("ffn", None)),
+        "w_dt": ParamDef((di, DT_RANK), ("ffn", None)),
+        "w_dt_out": ParamDef((DT_RANK, di), (None, "ffn")),
+        "dt_bias": ParamDef((di,), ("ffn",), zeros_init()),
+        "A_log": ParamDef((di, n), ("ffn", "state"), normal_init(0.1)),
+        "D": ParamDef((di,), ("ffn",), ones_init()),
+        "w_out": ParamDef((di, d), ("ffn", "embed")),
+    }
+
+
+def _causal_conv(x, kernel, conv_state=None):
+    """Depthwise causal conv1d. x: (B,S,di); kernel: (W,di).
+
+    conv_state: (B, W-1, di) tail of previous inputs (decode) or None.
+    Returns (y, new_conv_state).
+    """
+    W = kernel.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)              # (B, S+W-1, di)
+    y = sum(
+        xp[:, i:i + x.shape[1], :] * kernel[i][None, None, :]
+        for i in range(W)
+    )
+    return y, xp[:, -(W - 1):, :]
+
+
+def mamba_mixer(params, x, cfg: ModelConfig, state=None, conv_state=None,
+                use_pallas: bool = False):
+    """Selective SSM. x: (B,S,D). state: (B,di,n) or None.
+
+    Returns (out (B,S,D), new_state, new_conv_state). With use_pallas the
+    zero-state training path runs the VMEM-resident Pallas kernel
+    (kernels/mamba_scan.py); decode (state != None) stays on the scan.
+    """
+    B, S, D = x.shape
+    dt_ = x.dtype
+    di = d_inner(cfg)
+    n = cfg.ssm_state
+    xz = x @ params["w_in"].astype(dt_)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv_state = _causal_conv(xs, params["conv"].astype(dt_), conv_state)
+    xs = jax.nn.silu(xs)
+    bc = xs @ params["w_bc"].astype(dt_)
+    B_ssm, C_ssm = jnp.split(bc, 2, axis=-1)            # (B,S,n)
+    dt_raw = (xs @ params["w_dt"].astype(dt_)) @ params["w_dt_out"].astype(dt_)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )                                                   # (B,S,di)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))   # (di,n)
+    if state is None:
+        if use_pallas:
+            from repro.kernels import ops as kops
+
+            y32, state = kops.mamba_scan(
+                xs.astype(jnp.float32), dt,
+                B_ssm.astype(jnp.float32), C_ssm.astype(jnp.float32), A,
+            )
+            y = y32.astype(dt_) + xs * params["D"].astype(dt_)
+            y = y * jax.nn.silu(z)
+            return y @ params["w_out"].astype(dt_), state, conv_state
+        state = jnp.zeros((B, di, n), jnp.float32)
+
+    # Discretize INSIDE the scan: materializing dA/dBx as (B,S,di,n)
+    # tensors costs S x the state size (13+ GiB at train_4k) — the step
+    # recomputes them from the (B,S,di)/(B,S,n) inputs instead.
+    def step(h, inp):
+        xs_t, dt_t, B_t, C_t = inp        # (B,di),(B,di),(B,n),(B,n)
+        dA_t = jnp.exp(dt_t[:, :, None] * A[None])          # (B,di,n)
+        dBx_t = dt_t[:, :, None] * B_t[:, None, :] * xs_t[:, :, None]
+        h = dA_t * h + dBx_t
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs_s = jnp.moveaxis(xs.astype(jnp.float32), 1, 0)
+    dts = jnp.moveaxis(dt, 1, 0)
+    Bs = jnp.moveaxis(B_ssm.astype(jnp.float32), 1, 0)
+    Cs = jnp.moveaxis(C_ssm.astype(jnp.float32), 1, 0)
+    state, ys = jax.lax.scan(step, state, (xs_s, dts, Bs, Cs))
+    y = jnp.moveaxis(ys, 0, 1).astype(dt_)              # (B,S,di)
+    y = y + xs * params["D"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_out"].astype(dt_), state, conv_state
+
+
+# ------------------------------------------------------------------- layer
+def block_schema(cfg: ModelConfig) -> Schema:
+    return {
+        "norm": layers.rmsnorm_schema(cfg.d_model),
+        "attn": attention_schema(cfg),
+        "attn_out_norm": layers.rmsnorm_schema(cfg.d_model),
+        "mamba": mamba_schema(cfg),
+        "mamba_out_norm": layers.rmsnorm_schema(cfg.d_model),
+        "ffn_norm": layers.rmsnorm_schema(cfg.d_model),
+        "mlp": layers.swiglu_schema(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _stack(schema: Schema, n: int) -> Schema:
+    def rec(node):
+        if isinstance(node, ParamDef):
+            return ParamDef(
+                (n,) + node.shape, ("layers",) + node.axes, node.init, node.dtype
+            )
+        return {k: rec(v) for k, v in node.items()}
+
+    return rec(schema)
+
+
+def model_schema(cfg: ModelConfig) -> Schema:
+    return {
+        "embed": layers.embedding_schema(cfg.padded_vocab, cfg.d_model),
+        "layers": _stack(block_schema(cfg), cfg.n_layers),
+        "final_norm": layers.rmsnorm_schema(cfg.d_model),
+        "lm_head": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                            normal_init(0.02)),
+    }
+
+
+@dataclasses.dataclass
+class HymbaLM:
+    cfg: ModelConfig
+
+    def __post_init__(self):
+        cfg = self.cfg
+        if cfg.sliding_window == 0:
+            cfg = dataclasses.replace(cfg, sliding_window=SWA_WINDOW)
+            self.cfg = cfg
+        self.schema = model_schema(cfg)
+        self.n_params = param_count(self.schema)
+
+    def init(self, key):
+        return init_params(key, self.schema)
+
+    def abstract(self):
+        return abstract_params(self.schema)
+
+    # ------------------------------------------------------------- forward
+    def hidden_states(self, params, tokens, *, use_pallas=False, remat=True):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = layers.embed(params["embed"], tokens, dt)
+        x = residual(x)
+        S = x.shape[1]
+        positions = jnp.arange(S)[None, :]
+
+        def body(x, layer_params):
+            layer_params = layer_barrier(layer_params)
+            h = layers.rmsnorm(layer_params["norm"], x, cfg.norm_eps)
+            a = attention_block(layer_params["attn"], h, cfg, positions,
+                                use_pallas)
+            m, _, _ = mamba_mixer(layer_params["mamba"], h, cfg,
+                                  use_pallas=use_pallas)
+            a = layers.rmsnorm(layer_params["attn_out_norm"], a, cfg.norm_eps)
+            m = layers.rmsnorm(layer_params["mamba_out_norm"], m, cfg.norm_eps)
+            x = x + 0.5 * (a + m)
+            h = layers.rmsnorm(layer_params["ffn_norm"], x, cfg.norm_eps)
+            x = x + layers.swiglu(layer_params["mlp"], h)
+            return residual(x), None
+
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(fn, x, params["layers"])
+        return layers.rmsnorm(params["final_norm"], x, cfg.norm_eps), 0.0
+
+    def logits(self, params, tokens, *, use_pallas=False, remat=True):
+        x, aux = self.hidden_states(params, tokens, use_pallas=use_pallas,
+                                    remat=remat)
+        return logits_sharded(
+            layers.unembed({"table": params["lm_head"]}, x)), aux
+
+    def last_logits(self, params, tokens, *, use_pallas=False, remat=True):
+        x, _ = self.hidden_states(params, tokens, use_pallas=use_pallas,
+                                  remat=remat)
+        return logits_sharded(
+            layers.unembed({"table": params["lm_head"]}, x[:, -1:]))
+
+    def loss(self, params, batch, *, use_pallas=False, remat=True):
+        logits, _ = self.logits(params, batch["inputs"],
+                                use_pallas=use_pallas, remat=remat)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        mask = (labels >= 0).astype(jnp.float32)
+        safe = jnp.maximum(labels, 0)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+    # -------------------------------------------------------------- decode
+    def cache_spec(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        C = min(max_len, cfg.sliding_window)
+        hd = cfg.resolved_head_dim
+        L = cfg.n_layers
+        di = d_inner(cfg)
+        dt = jnp.dtype(cfg.dtype)
+        return {
+            "k": jax.ShapeDtypeStruct((L, batch, C, cfg.n_kv_heads, hd), dt),
+            "v": jax.ShapeDtypeStruct((L, batch, C, cfg.n_kv_heads, hd), dt),
+            "ssm": jax.ShapeDtypeStruct((L, batch, di, cfg.ssm_state),
+                                        jnp.float32),
+            "conv": jax.ShapeDtypeStruct((L, batch, cfg.conv_width - 1, di), dt),
+        }
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.cache_spec(batch, max_len)
+        )
+
+    def decode_step(self, params, cache, pos, tokens, *, use_pallas=False):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = layers.embed(params["embed"], tokens, dt)
+        positions = jnp.full((1, 1), pos, jnp.int32)
+        C = cache["k"].shape[2]
+        slot = pos % C
+
+        def body(x, scanned):
+            layer_params, k_c, v_c, ssm, conv = scanned
+            h = layers.rmsnorm(layer_params["norm"], x, cfg.norm_eps)
+            # --- attention side (ring-buffer SWA cache)
+            ap = layer_params["attn"]
+            B = x.shape[0]
+            hd = cfg.resolved_head_dim
+            H, Kv = cfg.n_heads, cfg.n_kv_heads
+            q = layers.apply_rope(
+                (h @ ap["wq"].astype(dt)).reshape(B, 1, H, hd), positions,
+                cfg.rope_theta,
+            )
+            k = layers.apply_rope(
+                (h @ ap["wk"].astype(dt)).reshape(B, 1, Kv, hd), positions,
+                cfg.rope_theta,
+            )
+            v = (h @ ap["wv"].astype(dt)).reshape(B, 1, Kv, hd)
+            k_c = jax.lax.dynamic_update_index_in_dim(k_c, k[:, 0], slot, axis=1)
+            v_c = jax.lax.dynamic_update_index_in_dim(v_c, v[:, 0], slot, axis=1)
+            a = layers.decode_attention(q, k_c, v_c, pos,
+                                        window=cfg.sliding_window)
+            a = a.reshape(B, 1, H * hd) @ ap["wo"].astype(dt)
+            # --- mamba side
+            m, ssm, conv = mamba_mixer(layer_params["mamba"], h, cfg,
+                                       state=ssm, conv_state=conv)
+            a = layers.rmsnorm(layer_params["attn_out_norm"], a, cfg.norm_eps)
+            m = layers.rmsnorm(layer_params["mamba_out_norm"], m, cfg.norm_eps)
+            x = x + 0.5 * (a + m)
+            hh = layers.rmsnorm(layer_params["ffn_norm"], x, cfg.norm_eps)
+            x = x + layers.swiglu(layer_params["mlp"], hh)
+            return x, (k_c, v_c, ssm, conv)
+
+        x, (k_c, v_c, ssm, conv) = jax.lax.scan(
+            body, x,
+            (params["layers"], cache["k"], cache["v"], cache["ssm"],
+             cache["conv"]),
+        )
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = layers.unembed({"table": params["lm_head"]}, x)
+        return logits, {"k": k_c, "v": v_c, "ssm": ssm, "conv": conv}

@@ -1,0 +1,220 @@
+"""Parameter schema system: one source of truth for shapes, init and sharding.
+
+Every model defines a *schema* — a nested dict whose leaves are
+:class:`ParamDef` (shape + logical axes + initializer). From the schema we
+derive, without drift:
+
+  * ``init_params``   -> pytree of arrays
+  * ``param_specs``   -> same-structure pytree of jax PartitionSpec, via a
+                         :class:`ShardingRules` policy (the Mapple-planned
+                         mapping of logical axes onto mesh axes).
+
+Logical axes vocabulary: "embed", "q_fused", "kv_fused", "o_fused", "ffn",
+"vocab", "experts", "layers", "heads", "state", "conv", None (unsharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+Initializer = Callable[[jax.Array, tuple[int, ...], Any], jax.Array]
+
+
+def normal_init(stddev: float = 0.02) -> Initializer:
+    def fn(key, shape, dtype):
+        return (stddev * jax.random.normal(key, shape)).astype(dtype)
+
+    return fn
+
+
+def scaled_init(fan_in_axis: int = 0) -> Initializer:
+    def fn(key, shape, dtype):
+        fan_in = shape[fan_in_axis]
+        std = 1.0 / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, shape)).astype(dtype)
+
+    return fn
+
+
+def zeros_init() -> Initializer:
+    def fn(key, shape, dtype):
+        return jnp.zeros(shape, dtype)
+
+    return fn
+
+
+def ones_init() -> Initializer:
+    def fn(key, shape, dtype):
+        return jnp.ones(shape, dtype)
+
+    return fn
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Leaf of a model schema."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: Initializer = dataclasses.field(default_factory=scaled_init)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+Schema = dict  # nested dict[str, Schema | ParamDef]
+
+
+def _walk(schema: Schema, fn: Callable[[ParamDef, tuple[str, ...]], Any],
+          path: tuple[str, ...] = ()) -> dict:
+    out = {}
+    for name, node in schema.items():
+        if isinstance(node, ParamDef):
+            out[name] = fn(node, path + (name,))
+        elif isinstance(node, dict):
+            out[name] = _walk(node, fn, path + (name,))
+        else:
+            raise TypeError(f"bad schema node at {path + (name,)}: {node!r}")
+    return out
+
+
+def init_params(key: jax.Array, schema: Schema, dtype=None) -> dict:
+    """Materialize the schema into arrays (deterministic per path)."""
+    leaves: list[tuple[ParamDef, tuple[str, ...]]] = []
+    _walk(schema, lambda d, p: leaves.append((d, p)) or 0)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    key_by_path = {p: k for (d, p), k in zip(leaves, keys)}
+
+    def make(d: ParamDef, path):
+        dt = dtype if dtype is not None else d.dtype
+        return d.init(key_by_path[path], d.shape, dt)
+
+    return _walk(schema, make)
+
+
+def abstract_params(schema: Schema, dtype=None) -> dict:
+    """ShapeDtypeStruct tree (for .lower() without allocation)."""
+
+    def make(d: ParamDef, path):
+        dt = dtype if dtype is not None else d.dtype
+        return jax.ShapeDtypeStruct(d.shape, dt)
+
+    return _walk(schema, make)
+
+
+def param_count(schema: Schema) -> int:
+    total = 0
+
+    def add(d: ParamDef, path):
+        nonlocal total
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+        return 0
+
+    _walk(schema, add)
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Policy mapping logical parameter axes to mesh axes.
+
+    ``mode``:
+      * "tp"    — Megatron tensor parallelism: fused head / ffn / vocab /
+                  expert dims shard over ``model_axis``; requires
+                  divisibility (checked per-leaf, falls back to replicate).
+      * "fsdp"  — ZeRO-3 style: the first shardable dim of every weight
+                  shards over ``model_axis``; XLA all-gathers per layer.
+    Optionally ``fsdp_data``: additionally shard the first remaining dim
+    over the data axis (2D "HSDP" sharding, a hillclimb lever).
+    """
+
+    mode: str = "tp"
+    model_axis: str = "model"
+    data_axis: str | tuple[str, ...] = "data"
+    model_size: int = 16
+    tp_axes: tuple[str, ...] = (
+        "q_fused", "kv_fused", "o_fused", "ffn", "vocab", "experts", "heads",
+    )
+    fsdp_data: bool = False
+    data_size: int = 16
+
+    def spec_for(self, d: ParamDef) -> P:
+        if self.mode == "tp":
+            entries: list[Any] = []
+            used_model = False
+            for size, ax in zip(d.shape, d.axes):
+                if (
+                    not used_model
+                    and ax in self.tp_axes
+                    and size % self.model_size == 0
+                ):
+                    entries.append(self.model_axis)
+                    used_model = True
+                else:
+                    entries.append(None)
+            if not used_model:
+                # Fall back to sharding 'embed' dims (row-parallel) if legal.
+                for i, (size, ax) in enumerate(zip(d.shape, d.axes)):
+                    if ax == "embed" and size % self.model_size == 0:
+                        entries[i] = self.model_axis
+                        break
+            return P(*entries)
+        if self.mode == "fsdp":
+            entries = [None] * len(d.shape)
+            placed_model = False
+            for i, (size, ax) in enumerate(zip(d.shape, d.axes)):
+                if ax == "layers":
+                    continue  # never shard the scan axis
+                if not placed_model and size % self.model_size == 0:
+                    entries[i] = self.model_axis
+                    placed_model = True
+                elif (
+                    self.fsdp_data
+                    and placed_model
+                    and entries[i] is None
+                    and size % self.data_size == 0
+                ):
+                    entries[i] = self.data_axis
+                    break
+            return P(*entries)
+        raise ValueError(f"unknown sharding mode {self.mode!r}")
+
+
+def param_specs(schema: Schema, rules: ShardingRules) -> dict:
+    return _walk(schema, lambda d, p: rules.spec_for(d))
+
+
+def opt_spec_for(d: ParamDef, rules: ShardingRules) -> P:
+    """ZeRO-1: optimizer moments take the param sharding PLUS the data axis
+    on the first still-unsharded dim that divides it (elementwise states
+    admit any even sharding; the re-gather rides the param update)."""
+    base = list(rules.spec_for(d))
+    while len(base) < len(d.shape):
+        base.append(None)
+    for i, (size, ax) in enumerate(zip(d.shape, d.axes)):
+        if base[i] is None and ax != "layers" and size % rules.data_size == 0:
+            base[i] = rules.data_axis
+            break
+    return P(*base)
+
+
+def opt_specs(schema: Schema, rules: ShardingRules) -> dict:
+    return _walk(schema, lambda d, p: opt_spec_for(d, rules))
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )

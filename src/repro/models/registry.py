@@ -1,0 +1,20 @@
+"""Model registry: config -> model object, by family."""
+from __future__ import annotations
+
+from repro.models.config import ModelConfig
+
+
+def build(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe"):
+        from repro.models.transformer import DecoderLM
+
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.rwkv6 import RWKV6LM
+
+        return RWKV6LM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.hymba import HymbaLM
+
+        return HymbaLM(cfg)
+    raise ValueError(f"unknown model family {cfg.family!r}")

@@ -1,0 +1,365 @@
+"""RWKV-6 "Finch" [arXiv:2404.05892] — attention-free RNN LM.
+
+Per layer: a time-mix block (WKV6 recurrence with data-dependent decay) and
+a channel-mix block. The WKV6 state is (heads, head_dim, head_dim) per
+sequence — O(1) in sequence length, which is why this arch runs the
+long_500k decode cell.
+
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,   w_t = exp(-exp(wdec_t))
+
+Training uses lax.scan over time (the Pallas kernel in
+repro.kernels.wkv6 implements the chunked TPU version of the same math).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.params import (
+    ParamDef,
+    Schema,
+    abstract_params,
+    init_params,
+    normal_init,
+    param_count,
+    zeros_init,
+)
+from repro.models.sharding import (constrain, layer_barrier,
+                                   logits_sharded, residual)
+
+BATCH = ("pod", "data")
+HEAD_DIM = 64
+DECAY_LORA = 64
+
+# WKV implementation for the training path: "scan" (paper-faithful
+# per-step recurrence, the baseline), "chunked" (flash-linear-attention
+# chunk-parallel form, the optimized path), or "auto".
+WKV_IMPL = "scan"
+
+
+def set_wkv_impl(impl: str) -> None:
+    global WKV_IMPL
+    assert impl in ("scan", "chunked", "auto")
+    globals()["WKV_IMPL"] = impl
+
+
+def n_rwkv_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEAD_DIM
+
+
+def timemix_schema(cfg: ModelConfig) -> Schema:
+    d = cfg.d_model
+    return {
+        "mu_r": ParamDef((d,), ("embed",), normal_init(0.01)),
+        "mu_k": ParamDef((d,), ("embed",), normal_init(0.01)),
+        "mu_v": ParamDef((d,), ("embed",), normal_init(0.01)),
+        "mu_w": ParamDef((d,), ("embed",), normal_init(0.01)),
+        "mu_g": ParamDef((d,), ("embed",), normal_init(0.01)),
+        "w_r": ParamDef((d, d), ("embed", "q_fused")),
+        "w_k": ParamDef((d, d), ("embed", "q_fused")),
+        "w_v": ParamDef((d, d), ("embed", "q_fused")),
+        "w_g": ParamDef((d, d), ("embed", "q_fused")),
+        "w_o": ParamDef((d, d), ("o_fused", "embed")),
+        # data-dependent decay: w0 + tanh(x @ A) @ B  (low-rank lora)
+        "w0": ParamDef((d,), ("embed",), normal_init(0.01)),
+        "wA": ParamDef((d, DECAY_LORA), ("embed", None)),
+        "wB": ParamDef((DECAY_LORA, d), (None, "embed")),
+        "u": ParamDef((d,), ("embed",), normal_init(0.01)),   # bonus
+        "ln_scale": ParamDef((d,), ("embed",), normal_init(0.01)),
+    }
+
+
+def channelmix_schema(cfg: ModelConfig) -> Schema:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_r": ParamDef((d,), ("embed",), normal_init(0.01)),
+        "mu_k": ParamDef((d,), ("embed",), normal_init(0.01)),
+        "w_r": ParamDef((d, d), ("embed", "q_fused")),
+        "w_k": ParamDef((d, f), ("embed", "ffn")),
+        "w_v": ParamDef((f, d), ("ffn", "embed")),
+    }
+
+
+def block_schema(cfg: ModelConfig) -> Schema:
+    return {
+        "tm_norm": layers.rmsnorm_schema(cfg.d_model),
+        "tm": timemix_schema(cfg),
+        "cm_norm": layers.rmsnorm_schema(cfg.d_model),
+        "cm": channelmix_schema(cfg),
+    }
+
+
+def _stack(schema: Schema, n: int) -> Schema:
+    def rec(node):
+        if isinstance(node, ParamDef):
+            return ParamDef(
+                (n,) + node.shape, ("layers",) + node.axes, node.init, node.dtype
+            )
+        return {k: rec(v) for k, v in node.items()}
+
+    return rec(schema)
+
+
+def model_schema(cfg: ModelConfig) -> Schema:
+    return {
+        "embed": layers.embedding_schema(cfg.padded_vocab, cfg.d_model),
+        "layers": _stack(block_schema(cfg), cfg.n_layers),
+        "final_norm": layers.rmsnorm_schema(cfg.d_model),
+        "lm_head": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                            normal_init(0.02)),
+    }
+
+
+# ------------------------------------------------------------------- blocks
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def wkv6_scan(r, k, v, w, u, state):
+    """The WKV6 recurrence over time (jnp reference path).
+
+    r,k,v,w: (B, S, H, N); u: (H, N); state: (B, H, N, N).
+    Returns (y (B,S,H,N), final_state).
+    """
+    B, S, H, N = r.shape
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                       # (B,H,N)
+        kv = k_t[..., :, None] * v_t[..., None, :]     # (B,H,N,N)
+        y = jnp.einsum(
+            "bhi,bhij->bhj", r_t, s + u[None, :, :, None] * kv
+        )
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    rs, ks, vs, ws = (
+        jnp.moveaxis(t, 1, 0) for t in (r, k, v, w)
+    )
+    state, ys = jax.lax.scan(step, state, (rs, ks, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def wkv6_chunked(r, k, v, w, u, state, chunk: int = 64):
+    """Chunk-parallel WKV6 (flash-linear-attention style).
+
+    Within a chunk of length T_c, with per-channel decays w and cumulative
+    products A_t = prod_{s<=t} w_s:
+
+      S_end = diag(A_T) S_0 + sum_s diag(A_T / A_s) k_s v_s^T
+      y_t   = (r_t A_{t-1}) . S_0
+            + sum_{s<t} ((r_t A_{t-1} / A_s) . k_s) v_s      (masked matmul)
+            + (r_t . u k_t) v_t                              (bonus diagonal)
+
+    Inter-chunk state is carried by a scan over chunks; intra-chunk work is
+    matmuls on (T_c, N) blocks — MXU-friendly, and the HBM traffic drops by
+    ~T_c vs the per-step scan. fp32 throughout; 1/A is bounded because
+    |chunk| * max(-log w) stays small for trained decays (same regime as
+    the reference CUDA kernel).
+    """
+    B, S, H, N = r.shape
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def reshape_c(t):
+        return t.reshape(B, nc, chunk, H, N).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, wc = (reshape_c(t) for t in (r, k, v, w))   # (nc,B,H,Tc,N)
+
+    def chunk_step(S0, inp):
+        r_b, k_b, v_b, w_b = inp                  # (B,H,Tc,N)
+        logw = jnp.log(jnp.maximum(w_b, 1e-38))
+        A = jnp.exp(jnp.cumsum(logw, axis=2))     # A_t, inclusive
+        A_prev = A / w_b                          # A_{t-1}
+        r_dec = r_b * A_prev                      # (B,H,Tc,N)
+        k_inv = k_b / A
+        # cross-chunk contribution
+        y = jnp.einsum("bhtn,bhnm->bhtm", r_dec, S0)
+        # intra-chunk pairwise (strictly causal)
+        scores = jnp.einsum("bhtn,bhsn->bhts", r_dec, k_inv)
+        mask = jnp.tril(jnp.ones((chunk, chunk)), -1)
+        y = y + jnp.einsum("bhts,bhsm->bhtm", scores * mask, v_b)
+        # bonus diagonal
+        diag = jnp.einsum("bhtn,bhtn->bht", r_b, u[None, :, None, :] * k_b)
+        y = y + diag[..., None] * v_b
+        # state update
+        S_new = A[:, :, -1, :, None] * S0 + jnp.einsum(
+            "bhsn,bhsm->bhnm", k_b * (A[:, :, -1:, :] / A), v_b
+        )
+        return S_new, y
+
+    state, ys = jax.lax.scan(chunk_step, state, (rc, kc, vc, wc))
+    # ys: (nc, B, H, Tc, N) -> (B, S, H, N)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, N)
+    return y, state
+
+
+def timemix(params, x, cfg: ModelConfig, state=None, x_prev=None,
+            use_pallas: bool = False):
+    """x: (B,S,D). state: (B,H,N,N) initial WKV state (decode) or None."""
+    B, S, D = x.shape
+    H, N = n_rwkv_heads(cfg), HEAD_DIM
+    dt = x.dtype
+    if x_prev is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xr = _lerp(x, x_prev, params["mu_r"].astype(dt))
+    xk = _lerp(x, x_prev, params["mu_k"].astype(dt))
+    xv = _lerp(x, x_prev, params["mu_v"].astype(dt))
+    xw = _lerp(x, x_prev, params["mu_w"].astype(dt))
+    xg = _lerp(x, x_prev, params["mu_g"].astype(dt))
+    r = (xr @ params["w_r"].astype(dt)).reshape(B, S, H, N)
+    k = (xk @ params["w_k"].astype(dt)).reshape(B, S, H, N)
+    v = (xv @ params["w_v"].astype(dt)).reshape(B, S, H, N)
+    g = jax.nn.silu(xg @ params["w_g"].astype(dt))
+    # data-dependent decay in (0, 1)
+    wdec = (
+        params["w0"].astype(jnp.float32)
+        + jnp.tanh(xw.astype(jnp.float32) @ params["wA"].astype(jnp.float32))
+        @ params["wB"].astype(jnp.float32)
+    )
+    w = jnp.exp(-jnp.exp(wdec)).reshape(B, S, H, N).astype(jnp.float32)
+    u = params["u"].astype(jnp.float32).reshape(H, N)
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        y, state = kops.wkv6(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w, u, state,
+        )
+    elif (WKV_IMPL in ("chunked", "auto")) and S % 64 == 0 and S > 64:
+        y, state = wkv6_chunked(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w, u, state,
+        )
+    else:
+        y, state = wkv6_scan(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w, u, state,
+        )
+    y = y.reshape(B, S, D).astype(dt)
+    # per-head group norm (approximated by rms over head dim groups)
+    y = layers.rmsnorm({"scale": params["ln_scale"]}, y, cfg.norm_eps)
+    out = (y * g) @ params["w_o"].astype(dt)
+    return out, state, x[:, -1]
+
+
+def channelmix(params, x, cfg: ModelConfig, x_prev=None):
+    dt = x.dtype
+    if x_prev is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xr = _lerp(x, x_prev, params["mu_r"].astype(dt))
+    xk = _lerp(x, x_prev, params["mu_k"].astype(dt))
+    r = jax.nn.sigmoid(xr @ params["w_r"].astype(dt))
+    k = jnp.square(jax.nn.relu(xk @ params["w_k"].astype(dt)))
+    return r * (k @ params["w_v"].astype(dt)), x[:, -1]
+
+
+# -------------------------------------------------------------------- model
+@dataclasses.dataclass
+class RWKV6LM:
+    cfg: ModelConfig
+
+    def __post_init__(self):
+        self.schema = model_schema(self.cfg)
+        self.n_params = param_count(self.schema)
+
+    def init(self, key):
+        return init_params(key, self.schema)
+
+    def abstract(self):
+        return abstract_params(self.schema)
+
+    def hidden_states(self, params, tokens, *, use_pallas=False, remat=True):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = layers.embed(params["embed"], tokens, dt)
+        x = residual(x)
+
+        def body(x, layer_params):
+            layer_params = layer_barrier(layer_params)
+            h = layers.rmsnorm(layer_params["tm_norm"], x, cfg.norm_eps)
+            out, _, _ = timemix(layer_params["tm"], h, cfg,
+                                use_pallas=use_pallas)
+            x = x + out
+            h = layers.rmsnorm(layer_params["cm_norm"], x, cfg.norm_eps)
+            out, _ = channelmix(layer_params["cm"], h, cfg)
+            x = x + out
+            return residual(x), None
+
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(fn, x, params["layers"])
+        return layers.rmsnorm(params["final_norm"], x, cfg.norm_eps), 0.0
+
+    def logits(self, params, tokens, *, use_pallas=False, remat=True):
+        x, aux = self.hidden_states(
+            params, tokens, use_pallas=use_pallas, remat=remat
+        )
+        return logits_sharded(
+            layers.unembed({"table": params["lm_head"]}, x)), aux
+
+    def last_logits(self, params, tokens, *, use_pallas=False, remat=True):
+        x, _ = self.hidden_states(params, tokens, use_pallas=use_pallas,
+                                  remat=remat)
+        return logits_sharded(
+            layers.unembed({"table": params["lm_head"]}, x[:, -1:]))
+
+    def loss(self, params, batch, *, use_pallas=False, remat=True):
+        logits, _ = self.logits(params, batch["inputs"],
+                                use_pallas=use_pallas, remat=remat)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        mask = (labels >= 0).astype(jnp.float32)
+        safe = jnp.maximum(labels, 0)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+    # -------------------------------------------------------------- decode
+    def cache_spec(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        H, N = n_rwkv_heads(cfg), HEAD_DIM
+        L, D = cfg.n_layers, cfg.d_model
+        return {
+            "wkv": jax.ShapeDtypeStruct((L, batch, H, N, N), jnp.float32),
+            "tm_prev": jax.ShapeDtypeStruct((L, batch, D), jnp.dtype(cfg.dtype)),
+            "cm_prev": jax.ShapeDtypeStruct((L, batch, D), jnp.dtype(cfg.dtype)),
+        }
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.cache_spec(batch, max_len)
+        )
+
+    def decode_step(self, params, cache, pos, tokens, *, use_pallas=False):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = layers.embed(params["embed"], tokens, dt)    # (B,1,D)
+
+        def body(x, scanned):
+            layer_params, wkv, tm_prev, cm_prev = scanned
+            h = layers.rmsnorm(layer_params["tm_norm"], x, cfg.norm_eps)
+            out, wkv_new, tm_new = timemix(
+                layer_params["tm"], h, cfg, state=wkv,
+                x_prev=tm_prev[:, None, :],
+            )
+            x = x + out
+            h = layers.rmsnorm(layer_params["cm_norm"], x, cfg.norm_eps)
+            out, cm_new = channelmix(
+                layer_params["cm"], h, cfg, x_prev=cm_prev[:, None, :]
+            )
+            x = x + out
+            return x, (wkv_new, tm_new, cm_new)
+
+        x, (wkv, tm_prev, cm_prev) = jax.lax.scan(
+            body, x, (params["layers"], cache["wkv"], cache["tm_prev"],
+                      cache["cm_prev"])
+        )
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = layers.unembed({"table": params["lm_head"]}, x)
+        return logits, {"wkv": wkv, "tm_prev": tm_prev, "cm_prev": cm_prev}

@@ -1,0 +1,163 @@
+"""Activation sharding constraints that degrade gracefully without a mesh.
+
+Model code annotates activations with *logical* axes; under a mesh context
+(the dry-run / production path) these become with_sharding_constraint calls,
+on bare CPU tests they are no-ops. Batch axes may span ("pod", "data").
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+
+# Activation policy: when set to "model", residual streams between layers
+# are additionally sharded over the model axis on the SEQUENCE dim
+# (Megatron-style sequence parallelism for remat storage). The launcher
+# enables it for training shapes; tests/decode leave it off.
+_ACT_SEQ_AXIS: str | None = None
+
+# MoE dispatch groups: tokens are routed within G independent groups (one
+# per data shard in production) so the dispatch buffer shards as
+# (G='data', E='model', C, D) and the dispatch lowers to an EP all-to-all
+# instead of a data-axis all-reduce of the full buffer. G=1 off-mesh.
+_MOE_GROUPS: int = 1
+
+
+def set_moe_groups(g: int) -> None:
+    global _MOE_GROUPS
+    _MOE_GROUPS = max(1, int(g))
+
+
+def moe_groups() -> int:
+    return _MOE_GROUPS
+
+
+# Layer barrier: under FSDP, XLA hoists the loop-invariant parameter
+# all-gathers out of the layer scan, materializing EVERY layer's full
+# weights at once (tens of GiB). An optimization_barrier on the per-layer
+# parameter slice pins the gather inside the loop body: one layer's
+# weights live at a time (trading gather/compute overlap for memory).
+_LAYER_BARRIER: bool = False
+
+
+def set_layer_barrier(on: bool) -> None:
+    global _LAYER_BARRIER
+    _LAYER_BARRIER = bool(on)
+
+
+def layer_barrier(tree):
+    import jax.numpy as jnp
+
+    try:
+        from repro.launch.knobs import active
+
+        bf16_gather = active().bf16_gather
+    except Exception:
+        bf16_gather = False
+    if bf16_gather:
+        # Cast BEFORE the (implicit) FSDP all-gather: the gather then moves
+        # bf16 instead of fp32 — half the collective bytes per layer.
+        tree = jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if p.dtype == jnp.float32 and p.ndim >= 2 else p,
+            tree,
+        )
+    if not _LAYER_BARRIER:
+        return tree
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    leaves = list(jax.lax.optimization_barrier(tuple(leaves)))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def set_sequence_sharding(axis: str | None) -> None:
+    global _ACT_SEQ_AXIS
+    _ACT_SEQ_AXIS = axis
+
+
+def seq_axis() -> str | None:
+    return _ACT_SEQ_AXIS
+
+
+def residual(x: jax.Array) -> jax.Array:
+    """Constraint for the (B, S, D) residual stream between layers."""
+    return constrain(x, BATCH_AXES, _ACT_SEQ_AXIS, None)
+
+
+def _current_mesh():
+    """The mesh in scope: set_mesh context, else the legacy `with mesh:`."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and tuple(mesh.axis_names):
+            return mesh
+    except Exception:
+        pass
+    try:
+        from jax._src import mesh as mesh_lib
+
+        phys = mesh_lib.thread_resources.env.physical_mesh
+        if phys is not None and not phys.empty:
+            return phys
+    except Exception:
+        pass
+    return None
+
+
+def _mesh_axis_names() -> tuple[str, ...]:
+    mesh = _current_mesh()
+    return tuple(mesh.axis_names) if mesh is not None else ()
+
+
+def _filter(entry, names: tuple[str, ...]):
+    if entry is None:
+        return None
+    if isinstance(entry, (tuple, list)):
+        kept = tuple(a for a in entry if a in names)
+        return kept if kept else None
+    return entry if entry in names else None
+
+
+def constrain(x: jax.Array, *entries) -> jax.Array:
+    """with_sharding_constraint(x, P(*entries)) filtered to live mesh axes.
+
+    Entries may be axis names, tuples of names, or None. Sizes that do not
+    divide evenly fall back to unsharded for that dim.
+    """
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    names = tuple(mesh.axis_names)
+    try:
+        sizes = {a: int(mesh.shape[a]) for a in names}
+    except Exception:
+        sizes = {}
+    spec_entries = []
+    for dim, e in zip(range(x.ndim), list(entries) + [None] * (x.ndim - len(entries))):
+        f = _filter(e, names)
+        if f is not None and sizes:
+            total = 1
+            for a in (f if isinstance(f, tuple) else (f,)):
+                total *= sizes.get(a, 1)
+            if total == 0 or x.shape[dim] % max(total, 1) != 0:
+                f = None
+        spec_entries.append(f)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec_entries))
+    except Exception:
+        return x
+
+
+def batch_sharded(x: jax.Array) -> jax.Array:
+    """Shard the leading batch dim over (pod, data)."""
+    return constrain(x, BATCH_AXES)
+
+
+def logits_sharded(x: jax.Array) -> jax.Array:
+    """Shard the vocab (last) dim of logits over the model axis: the
+    (B, S, V) cross-entropy intermediate is the largest single activation
+    at 32k-vocab scales, so it must never be replicated."""
+    entries = [BATCH_AXES] + [None] * (x.ndim - 2) + [MODEL_AXIS]
+    return constrain(x, *entries)

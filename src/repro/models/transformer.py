@@ -1,0 +1,466 @@
+"""Decoder-only transformer covering the dense / MoE / MLA assigned archs.
+
+One module, config-driven:
+  * GQA attention with optional QKV bias (qwen2), sliding window (danube),
+    and MLA latent attention (deepseek-v2-lite);
+  * dense SwiGLU FFN, or shared+routed MoE FFN (deepseek, qwen2-moe) with
+    leading dense layers;
+  * stacked layer parameters + lax.scan + remat (framework-scale: compile
+    time and HBM stay bounded at 48 layers);
+  * modality-stub inputs (musicgen frames / pixtral patches): apply() takes
+    precomputed embeddings instead of token ids;
+  * decode path with KV (or MLA latent / SWA ring-buffer) caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe
+from repro.models.config import ModelConfig
+from repro.models.params import (
+    ParamDef,
+    Schema,
+    abstract_params,
+    init_params,
+    normal_init,
+    param_count,
+    scaled_init,
+)
+from repro.models.sharding import (constrain, layer_barrier,
+                                   logits_sharded, residual)
+
+BATCH = ("pod", "data")
+
+
+def _stack(schema: Schema, n: int) -> Schema:
+    """Add a leading 'layers' axis to every leaf (scan-stacked params)."""
+
+    def rec(node):
+        if isinstance(node, ParamDef):
+            return ParamDef(
+                (n,) + node.shape, ("layers",) + node.axes, node.init, node.dtype
+            )
+        return {k: rec(v) for k, v in node.items()}
+
+    return rec(schema)
+
+
+# ------------------------------------------------------------ layer schemas
+def attention_schema(cfg: ModelConfig) -> Schema:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    H, Kv = cfg.n_heads, cfg.n_kv_heads
+    if cfg.use_mla:
+        qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+        sch: Schema = {
+            "wq": ParamDef((d, H * qk_dim), ("embed", "q_fused")),
+            "w_dkv": ParamDef((d, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                              ("embed", None)),
+            "kv_norm": layers.rmsnorm_schema(cfg.kv_lora_rank)["scale"],
+            "w_uk": ParamDef((cfg.kv_lora_rank, H * cfg.qk_nope_dim),
+                             (None, "q_fused")),
+            "w_uv": ParamDef((cfg.kv_lora_rank, H * cfg.v_head_dim),
+                             (None, "q_fused")),
+            "wo": ParamDef((H * cfg.v_head_dim, d), ("o_fused", "embed")),
+        }
+        return sch
+    sch = {
+        "wq": ParamDef((d, H * hd), ("embed", "q_fused")),
+        "wk": ParamDef((d, Kv * hd), ("embed", "kv_fused")),
+        "wv": ParamDef((d, Kv * hd), ("embed", "kv_fused")),
+        "wo": ParamDef((H * hd, d), ("o_fused", "embed")),
+    }
+    if cfg.qkv_bias:
+        sch["bq"] = ParamDef((H * hd,), ("q_fused",), normal_init(0.0))
+        sch["bk"] = ParamDef((Kv * hd,), ("kv_fused",), normal_init(0.0))
+        sch["bv"] = ParamDef((Kv * hd,), ("kv_fused",), normal_init(0.0))
+    return sch
+
+
+def block_schema(cfg: ModelConfig, use_moe: bool) -> Schema:
+    sch: Schema = {
+        "attn_norm": layers.rmsnorm_schema(cfg.d_model),
+        "attn": attention_schema(cfg),
+        "ffn_norm": layers.rmsnorm_schema(cfg.d_model),
+    }
+    if use_moe:
+        sch["moe"] = moe.moe_schema(cfg)
+    else:
+        sch["mlp"] = layers.swiglu_schema(cfg.d_model, cfg.d_ff)
+    return sch
+
+
+def model_schema(cfg: ModelConfig) -> Schema:
+    sch: Schema = {}
+    if not cfg.stub_frontend:
+        sch["embed"] = layers.embedding_schema(cfg.padded_vocab, cfg.d_model)
+    n_moe = cfg.n_layers - cfg.first_dense_layers if cfg.n_experts else 0
+    n_dense = cfg.n_layers - n_moe
+    if n_dense:
+        sch["dense_layers"] = _stack(block_schema(cfg, use_moe=False), n_dense)
+    if n_moe:
+        sch["moe_layers"] = _stack(block_schema(cfg, use_moe=True), n_moe)
+    sch["final_norm"] = layers.rmsnorm_schema(cfg.d_model)
+    n_heads_out = max(cfg.num_codebooks, 1)
+    if not cfg.tie_embeddings or cfg.stub_frontend:
+        sch["lm_head"] = ParamDef(
+            (n_heads_out * cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+            normal_init(0.02),
+        )
+    return sch
+
+
+# ---------------------------------------------------------------- attention
+def attention_block(params, x, cfg: ModelConfig, positions, use_pallas=False):
+    B, S, D = x.shape
+    dt = x.dtype
+    H, Kv = cfg.n_heads, cfg.n_kv_heads
+    if cfg.use_mla:
+        qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+        q = (x @ params["wq"].astype(dt)).reshape(B, S, H, qk_dim)
+        q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+        q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+        ckv = x @ params["w_dkv"].astype(dt)
+        c_kv, k_rope = jnp.split(ckv, [cfg.kv_lora_rank], axis=-1)
+        c_kv = layers.rmsnorm({"scale": params["kv_norm"]}, c_kv, cfg.norm_eps)
+        k_rope = layers.apply_rope(
+            k_rope[:, :, None, :], positions, cfg.rope_theta
+        )                                                    # (B,S,1,rope)
+        k_nope = (c_kv @ params["w_uk"].astype(dt)).reshape(
+            B, S, H, cfg.qk_nope_dim
+        )
+        v = (c_kv @ params["w_uv"].astype(dt)).reshape(B, S, H, cfg.v_head_dim)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, S, H, cfg.qk_rope_dim))],
+            axis=-1,
+        )
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = layers.attention(
+            q, k, v, window=cfg.sliding_window, use_pallas=use_pallas,
+            scale=qk_dim ** -0.5,
+        )
+        out = out.reshape(B, S, H * cfg.v_head_dim)
+        return out @ params["wo"].astype(dt)
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Kv, hd)
+    v = v.reshape(B, S, Kv, hd)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    out = layers.attention(
+        q, k, v, window=cfg.sliding_window, use_pallas=use_pallas
+    )
+    out = constrain(out.reshape(B, S, H * hd), BATCH, None, "model")
+    return out @ params["wo"].astype(dt)
+
+
+def block_apply(params, x, cfg: ModelConfig, positions, use_moe: bool,
+                use_pallas: bool = False):
+    h = layers.rmsnorm(params["attn_norm"], x, cfg.norm_eps)
+    x = x + attention_block(params["attn"], h, cfg, positions, use_pallas)
+    x = residual(x)
+    h = layers.rmsnorm(params["ffn_norm"], x, cfg.norm_eps)
+    if use_moe:
+        y, aux = moe.moe_apply(params["moe"], h, cfg)
+    else:
+        y, aux = layers.swiglu(params["mlp"], h), 0.0
+    x = x + y
+    x = residual(x)
+    return x, aux
+
+
+# ------------------------------------------------------------- full forward
+@dataclasses.dataclass
+class DecoderLM:
+    cfg: ModelConfig
+
+    def __post_init__(self):
+        self.schema = model_schema(self.cfg)
+        self.n_params = param_count(self.schema)
+
+    # -------------------------------------------------------------- params
+    def init(self, key):
+        return init_params(key, self.schema)
+
+    def abstract(self):
+        return abstract_params(self.schema)
+
+    # ------------------------------------------------------------- forward
+    def hidden_states(self, params, inputs, *, use_pallas=False, remat=True):
+        """inputs: token ids (B,S) int32, or embeddings (B,S,D) for stubs."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        if cfg.stub_frontend:
+            x = inputs.astype(dt)
+        else:
+            x = layers.embed(params["embed"], inputs, dt)
+        x = residual(x)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.arange(S)[None, :]
+
+        def scan_stack(x, stacked, use_moe):
+            def body(carry, layer_params):
+                x, aux = carry
+                layer_params = layer_barrier(layer_params)
+                fn = functools.partial(
+                    block_apply, cfg=cfg, positions=positions,
+                    use_moe=use_moe, use_pallas=use_pallas,
+                )
+                if remat:
+                    fn = jax.checkpoint(fn)
+                x, aux_i = fn(layer_params, x)
+                return (x, aux + aux_i), None
+
+            (x, aux), _ = jax.lax.scan(body, (x, 0.0), stacked)
+            return x, aux
+
+        aux_total = 0.0
+        if "dense_layers" in params:
+            x, aux = scan_stack(x, params["dense_layers"], use_moe=False)
+            aux_total += aux
+        if "moe_layers" in params:
+            x, aux = scan_stack(x, params["moe_layers"], use_moe=True)
+            aux_total += aux
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return x, aux_total
+
+    def logits(self, params, inputs, *, use_pallas=False, remat=True):
+        cfg = self.cfg
+        x, aux = self.hidden_states(
+            params, inputs, use_pallas=use_pallas, remat=remat
+        )
+        if "lm_head" in params:
+            table = params["lm_head"]
+        else:
+            table = params["embed"]["table"]
+        logits = layers.unembed({"table": table}, x)
+        if cfg.num_codebooks > 1:
+            B, S, _ = logits.shape
+            logits = logits.reshape(B, S, cfg.num_codebooks, cfg.padded_vocab)
+        return logits_sharded(logits), aux
+
+    def last_logits(self, params, inputs, *, use_pallas=False, remat=True):
+        """Prefill entry point: logits at the LAST position only — the full
+        (B, S, V) prefill logit tensor is never materialized."""
+        cfg = self.cfg
+        x, _ = self.hidden_states(
+            params, inputs, use_pallas=use_pallas, remat=remat
+        )
+        x = x[:, -1:]
+        table = params.get("lm_head")
+        if table is None:
+            table = params["embed"]["table"]
+        logits = layers.unembed({"table": table}, x)
+        if cfg.num_codebooks > 1:
+            B = logits.shape[0]
+            logits = logits.reshape(B, 1, cfg.num_codebooks, cfg.padded_vocab)
+        return logits_sharded(logits)
+
+    def loss(self, params, batch, *, use_pallas=False, remat=True):
+        """batch: {"inputs": ids|embeds, "labels": (B,S[,n_codebooks])}."""
+        cfg = self.cfg
+        logits, aux = self.logits(
+            params, batch["inputs"], use_pallas=use_pallas, remat=remat
+        )
+        labels = batch["labels"]
+        logits = logits.astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        mask = (labels >= 0).astype(jnp.float32)
+        safe = jnp.maximum(labels, 0)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        return loss + 0.01 * aux
+
+    # -------------------------------------------------------------- decode
+    def cache_spec(self, batch: int, max_len: int) -> dict:
+        """Abstract KV cache shapes (ring buffer when sliding window)."""
+        cfg = self.cfg
+        C = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        dt = jnp.dtype(cfg.dtype)
+        L = cfg.n_layers
+        if cfg.use_mla:
+            return {
+                "ckv": jax.ShapeDtypeStruct((L, batch, C, cfg.kv_lora_rank), dt),
+                "krope": jax.ShapeDtypeStruct((L, batch, C, cfg.qk_rope_dim), dt),
+            }
+        hd = cfg.resolved_head_dim
+        return {
+            "k": jax.ShapeDtypeStruct((L, batch, C, cfg.n_kv_heads, hd), dt),
+            "v": jax.ShapeDtypeStruct((L, batch, C, cfg.n_kv_heads, hd), dt),
+        }
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.cache_spec(batch, max_len)
+        )
+
+    def decode_step(self, params, cache, pos, token_or_embed, *,
+                    use_pallas=False):
+        """One decode step. pos: scalar int32 (tokens generated so far)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        if cfg.stub_frontend:
+            x = token_or_embed.astype(dt)              # (B, 1, D)
+        else:
+            x = layers.embed(params["embed"], token_or_embed, dt)  # (B,1,D)
+        positions = jnp.full((1, 1), pos, jnp.int32)
+        C = (
+            cache["ckv"].shape[2] if cfg.use_mla else cache["k"].shape[2]
+        )
+        if cfg.sliding_window > 0:
+            slot = pos % C                       # ring buffer
+        else:
+            slot = jnp.minimum(pos, C - 1)
+
+        def layer(carry, scanned):
+            x = carry
+            layer_params, cache_layer = scanned
+            h = layers.rmsnorm(layer_params["attn_norm"], x, cfg.norm_eps)
+            attn_out, new_cache_layer = self._decode_attention(
+                layer_params["attn"], h, cfg, positions, pos, slot, cache_layer
+            )
+            x = x + attn_out
+            h = layers.rmsnorm(layer_params["ffn_norm"], x, cfg.norm_eps)
+            if "moe" in layer_params:
+                y, _ = moe.moe_apply(layer_params["moe"], h, cfg)
+            else:
+                y = layers.swiglu(layer_params["mlp"], h)
+            return x + y, new_cache_layer
+
+        # Assemble a single stacked layer tree (dense prefix + moe suffix).
+        stacks = []
+        if "dense_layers" in params:
+            stacks.append(("dense_layers", params["dense_layers"]))
+        if "moe_layers" in params:
+            stacks.append(("moe_layers", params["moe_layers"]))
+        if len(stacks) == 1:
+            # Fast path: carry the cache and update in place — scanning the
+            # cache as xs/ys double-buffers the full multi-GiB KV cache
+            # (xs and stacked ys can never alias).
+            def carry_layer(carry, scanned):
+                x, full_cache, i = carry
+                layer_params = scanned
+                cache_layer = {
+                    k: jax.lax.dynamic_index_in_dim(v, i, 0, keepdims=False)
+                    for k, v in full_cache.items()
+                }
+                x, new_layer = layer(x, (layer_params, cache_layer))
+                full_cache = {
+                    k: jax.lax.dynamic_update_index_in_dim(
+                        full_cache[k], new_layer[k], i, 0
+                    )
+                    for k in full_cache
+                }
+                return (x, full_cache, i + 1), None
+
+            (x, new_cache, _), _ = jax.lax.scan(
+                carry_layer, (x, cache, jnp.int32(0)), stacks[0][1]
+            )
+        else:
+            offset = 0
+            new_cache_parts = {k: [] for k in cache}
+            for name, stacked in stacks:
+                n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+                cache_slice = {
+                    k: jax.lax.dynamic_slice_in_dim(v, offset, n, axis=0)
+                    for k, v in cache.items()
+                }
+                x, updated = jax.lax.scan(layer, x, (stacked, cache_slice))
+                for k in cache:
+                    new_cache_parts[k].append(updated[k])
+                offset += n
+            new_cache = {
+                k: jnp.concatenate(v, axis=0) if len(v) > 1 else v[0]
+                for k, v in new_cache_parts.items()
+            }
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        table = params.get("lm_head", None)
+        if table is None:
+            table = params["embed"]["table"]
+        logits = layers.unembed({"table": table}, x)
+        if cfg.num_codebooks > 1:
+            B = logits.shape[0]
+            logits = logits.reshape(B, 1, cfg.num_codebooks, cfg.padded_vocab)
+        return logits, new_cache
+
+    def _decode_attention(self, params, x, cfg, positions, pos, slot, cache):
+        B = x.shape[0]
+        dt = x.dtype
+        H, Kv = cfg.n_heads, cfg.n_kv_heads
+        if cfg.use_mla:
+            qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+            q = (x @ params["wq"].astype(dt)).reshape(B, 1, H, qk_dim)
+            q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+            q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+            q = jnp.concatenate([q_nope, q_rope], axis=-1)
+            ckv_new = x @ params["w_dkv"].astype(dt)
+            c_kv, k_rope = jnp.split(ckv_new, [cfg.kv_lora_rank], axis=-1)
+            c_kv = layers.rmsnorm({"scale": params["kv_norm"]}, c_kv,
+                                  cfg.norm_eps)
+            k_rope = layers.apply_rope(
+                k_rope[:, :, None, :], positions, cfg.rope_theta
+            )[:, :, 0, :]
+            ckv_cache = jax.lax.dynamic_update_index_in_dim(
+                cache["ckv"], c_kv[:, 0], slot, axis=1
+            )
+            kr_cache = jax.lax.dynamic_update_index_in_dim(
+                cache["krope"], k_rope[:, 0], slot, axis=1
+            )
+            # Reconstruct K, V for all cached latents.
+            k_nope = jnp.einsum(
+                "bcr,rx->bcx", ckv_cache, params["w_uk"].astype(dt)
+            ).reshape(B, -1, H, cfg.qk_nope_dim)
+            v = jnp.einsum(
+                "bcr,rx->bcx", ckv_cache, params["w_uv"].astype(dt)
+            ).reshape(B, -1, H, cfg.v_head_dim)
+            k = jnp.concatenate(
+                [
+                    k_nope,
+                    jnp.broadcast_to(
+                        kr_cache[:, :, None, :],
+                        k_nope.shape[:3] + (cfg.qk_rope_dim,),
+                    ),
+                ],
+                axis=-1,
+            )
+            out = layers.decode_attention(
+                q, k, v, pos, window=cfg.sliding_window, scale=qk_dim ** -0.5
+            )
+            out = out.reshape(B, 1, H * cfg.v_head_dim)
+            return out @ params["wo"].astype(dt), {
+                "ckv": ckv_cache, "krope": kr_cache,
+            }
+        hd = cfg.resolved_head_dim
+        q = x @ params["wq"].astype(dt)
+        k = x @ params["wk"].astype(dt)
+        v = x @ params["wv"].astype(dt)
+        if cfg.qkv_bias:
+            q = q + params["bq"].astype(dt)
+            k = k + params["bk"].astype(dt)
+            v = v + params["bv"].astype(dt)
+        q = layers.apply_rope(q.reshape(B, 1, H, hd), positions, cfg.rope_theta)
+        k = layers.apply_rope(k.reshape(B, 1, Kv, hd), positions, cfg.rope_theta)
+        v = v.reshape(B, 1, Kv, hd)
+        k_cache = jax.lax.dynamic_update_index_in_dim(
+            cache["k"], k[:, 0], slot, axis=1
+        )
+        v_cache = jax.lax.dynamic_update_index_in_dim(
+            cache["v"], v[:, 0], slot, axis=1
+        )
+        out = layers.decode_attention(
+            q, k_cache, v_cache, pos, window=cfg.sliding_window
+        )
+        out = out.reshape(B, 1, H * hd)
+        return out @ params["wo"].astype(dt), {"k": k_cache, "v": v_cache}

@@ -1,0 +1,5 @@
+"""Runtime resilience: failures, stragglers, elastic, compression."""
+from repro.runtime.resilience import (
+    FailureInjector, SimulatedFailure, StragglerMonitor, Supervisor, elastic_plan,
+)
+from repro.runtime import compression

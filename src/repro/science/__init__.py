@@ -1,0 +1,2 @@
+"""Scientific workloads (paper apps 7-9): circuit, stencil, pennant proxy."""
+from repro.science import circuit, pennant, stencil2d  # noqa: F401

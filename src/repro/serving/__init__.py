@@ -1,0 +1,2 @@
+"""Serving layer: continuous batching scheduler."""
+from repro.serving.scheduler import ContinuousBatcher, Request, ServeStats

@@ -1,0 +1,3 @@
+"""Training substrate: optimizer, train step, loop."""
+from repro.training.optimizer import AdamWConfig, AdamWState, init, update
+from repro.training.loop import TrainLoop, TrainState, init_state, make_train_step

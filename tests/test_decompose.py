@@ -1,0 +1,132 @@
+"""Tests for the decompose solver (paper Sec. 4) — optimality, baselines."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.decompose import (
+    count_factorizations,
+    enumerate_factorizations,
+    greedy_factorization,
+    greedy_workload_factorization,
+    halo_objective,
+    optimal_factorization,
+    prime_factorization,
+    transpose_objective,
+)
+from repro.core.commvolume import (
+    aniso_halo_volume,
+    halo_surface_volume,
+    transpose_volume,
+)
+
+
+def test_prime_factorization():
+    assert prime_factorization(1) == []
+    assert prime_factorization(2) == [2]
+    assert prime_factorization(48) == [2, 2, 2, 2, 3]
+    assert prime_factorization(97) == [97]
+
+
+def test_enumeration_complete_and_counts():
+    # Sec 4.3: d=16, k=3 -> C(6,2)=15 factorizations.
+    facts = list(enumerate_factorizations(16, 3))
+    assert len(facts) == 15 == count_factorizations(16, 3)
+    assert all(math.prod(f) == 16 for f in facts)
+    assert len(set(facts)) == len(facts)
+    # d = 48 = 2^4 * 3: C(6,2) * C(3,2) = 15 * 3 = 45.
+    assert count_factorizations(48, 3) == 45
+    assert len(list(enumerate_factorizations(48, 3))) == 45
+
+
+def test_paper_sec41_example():
+    """6 procs, iteration (12,18): optimal grid (2,3), greedy picks (3,2)."""
+    assert optimal_factorization(6, (12, 18)) == (2, 3)
+    assert greedy_factorization(6, 2) == (3, 2)
+    # Volumes from Fig. 8: 96 vs 84 boundary elements.
+    assert 2 * halo_surface_volume((12, 18), (3, 2)) == pytest.approx(96)
+    assert 2 * halo_surface_volume((18, 12), (3, 2)) == pytest.approx(84)
+    assert 2 * halo_surface_volume((12, 18), (2, 3)) == pytest.approx(84)
+
+
+def test_paper_sec43_greedy_strawman():
+    """d=72, l=(8,9): greedy workload balancing is suboptimal; search exact."""
+    opt = optimal_factorization(72, (8, 9))
+    assert opt == (8, 9)  # workload (1, 1)
+    greedy = greedy_workload_factorization(72, (8, 9))
+    obj = halo_objective((8, 9))
+    assert obj(greedy) >= obj(opt)
+
+
+def test_decompose_3d_fig9():
+    """Fig. 9: 16 procs over (4,8,4) -> workload (2,2,2) i.e. grid (2,4,2)."""
+    assert optimal_factorization(16, (4, 8, 4)) == (2, 4, 2)
+
+
+def test_anisotropic_objective():
+    """Sec 7.2.1: heavy halo in dim 0 pushes cuts to dim 1."""
+    iso = optimal_factorization(16, (64, 64))
+    assert iso == (4, 4)
+    aniso = optimal_factorization(16, (64, 64), halo=(16.0, 1.0))
+    # Cutting along dim 0 is 16x more expensive -> fewer cuts across dim 0.
+    assert aniso[0] < aniso[1]
+    v_iso = aniso_halo_volume((64, 64), iso, (16.0, 1.0))
+    v_opt = aniso_halo_volume((64, 64), aniso, (16.0, 1.0))
+    assert v_opt <= v_iso
+
+
+def test_transpose_objective():
+    obj = transpose_objective((256, 256), transpose_dims=(0,))
+    f = optimal_factorization(64, (256, 256), objective=obj)
+    # All-to-all along dim 0 penalizes splitting dim 0.
+    assert f[0] <= f[1]
+    assert transpose_volume((256, 256), (1, 64), (0,)) == 0.0
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    d=st.integers(1, 96),
+    lengths=st.lists(st.integers(1, 64), min_size=1, max_size=3).map(tuple),
+)
+def test_optimal_beats_every_factorization(d, lengths):
+    """The optimality claim of Sec 4.3: enumerator <= every candidate."""
+    k = len(lengths)
+    obj = halo_objective(lengths)
+    best = optimal_factorization(d, lengths)
+    assert math.prod(best) == d
+    for cand in enumerate_factorizations(d, k):
+        assert obj(best) <= obj(cand) + 1e-12
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    d=st.integers(1, 64),
+    k=st.integers(1, 4),
+)
+def test_greedy_is_valid_factorization(d, k):
+    f = greedy_factorization(d, k)
+    assert math.prod(f) == d
+    assert list(f) == sorted(f, reverse=True)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    d=st.integers(2, 64),
+    lengths=st.lists(st.integers(2, 64), min_size=2, max_size=3).map(tuple),
+)
+def test_optimal_never_worse_than_greedy(d, lengths):
+    """The paper's headline: decompose >= Algorithm 1, always."""
+    k = len(lengths)
+    obj = halo_objective(lengths)
+    opt = optimal_factorization(d, lengths)
+    gre = greedy_factorization(d, k)
+    assert obj(opt) <= obj(gre) + 1e-12
+
+
+def test_surface_volume_matches_aniso_form():
+    """2S (Sec 4.2) and the directional form agree up to boundary terms."""
+    lengths, factors = (24, 36), (4, 6)
+    s = halo_surface_volume(lengths, factors)
+    # interior cuts: (d0-1) planes of size l1 + (d1-1) planes of size l0
+    expected = (factors[0] - 1) * lengths[1] + (factors[1] - 1) * lengths[0]
+    assert s == pytest.approx(expected)

@@ -1,0 +1,136 @@
+"""Dry-run machinery tests: HLO cost analyzer, policies, cell wiring."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_cost
+from repro.launch.hlo_analysis import collective_stats, shape_bytes
+from repro.launch.specs import runnable
+from repro.configs import get_config
+from repro.models.config import SHAPES
+from repro.models.params import ShardingRules, opt_spec_for, ParamDef
+from jax.sharding import PartitionSpec as P
+
+
+# ------------------------------------------------------------- hlo parsing
+def test_shape_bytes():
+    assert shape_bytes("bf16[16,256]{1,0}") == 16 * 256 * 2
+    assert shape_bytes("(f32[8], s32[4])") == 8 * 4 + 4 * 4
+    assert shape_bytes("pred[]") == 1
+
+
+def test_loop_aware_flops_exact():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, None, length=7)
+        return c
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    comp = jax.jit(f).lower(x, x).compile()
+    costs = hlo_cost.analyze(comp.as_text())
+    assert costs.flops == pytest.approx(7 * 2 * 64**3, rel=1e-6)
+
+
+def test_nested_loop_flops_exact():
+    def g(x, w):
+        def outer(c, _):
+            def inner(d, _):
+                return jnp.tanh(d @ w), None
+            d, _ = jax.lax.scan(inner, c, None, length=3)
+            return d, None
+        c, _ = jax.lax.scan(outer, x, None, length=5)
+        return c
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    comp = jax.jit(g).lower(x, x).compile()
+    costs = hlo_cost.analyze(comp.as_text())
+    assert costs.flops == pytest.approx(15 * 2 * 32**3, rel=1e-6)
+
+
+def test_flops_vs_analytic_model_flops():
+    """Compiled (loop-corrected) flops for a tiny LM must land within 2x of
+    the 6*N*D + attention analytic estimate (fwd+bwd+remat ~ 8*N*D)."""
+    from repro.models import build
+
+    cfg = get_config("smollm-135m").reduced()
+    model = build(cfg)
+    B, S = 2, 64
+    batch = {
+        "inputs": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+
+    def loss_grad(params, batch):
+        return jax.value_and_grad(lambda p: model.loss(p, batch))(params)
+
+    comp = jax.jit(loss_grad).lower(model.abstract(), batch).compile()
+    costs = hlo_cost.analyze(comp.as_text())
+    analytic = 8.0 * model.n_params * B * S     # fwd 2 + bwd 4 + remat 2
+    assert costs.flops > 0.3 * analytic
+    assert costs.flops < 3.0 * analytic
+
+
+def test_collective_stats_counts():
+    hlo = """
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %ag = f32[16] all-gather(%p), replica_groups={}
+  %ar.1 = f32[8] all-reduce(%p), to_apply=%add
+  %cp-start = f32[8] collective-permute-start(%p)
+  %cp-done = f32[8] collective-permute-done(%cp-start)
+}
+"""
+    stats = collective_stats(hlo)
+    assert stats.bytes_by_kind["all-gather"] == 64
+    assert stats.bytes_by_kind["all-reduce"] == 32
+    assert stats.bytes_by_kind["collective-permute"] == 32
+    assert "collective-permute" in stats.count_by_kind
+
+
+# ---------------------------------------------------------------- policies
+def test_runnable_matrix():
+    n_run = n_skip = 0
+    from repro.configs import ARCH_IDS
+
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, why = runnable(cfg, shape)
+            if ok:
+                n_run += 1
+            else:
+                n_skip += 1
+                assert shape.name == "long_500k"
+                assert "sub-quadratic" in why
+    assert n_run == 33 and n_skip == 7   # 40 cells, 7 long_500k skips
+
+
+def test_sharding_rules_tp_divisibility():
+    rules = ShardingRules(mode="tp", model_size=16)
+    d = ParamDef((2048, 8192), ("embed", "ffn"))
+    assert rules.spec_for(d) == P(None, "model")
+    # non-divisible fused dim falls back to embed (row) sharding
+    d2 = ParamDef((2048, 28 * 128), ("embed", "q_fused"))
+    assert rules.spec_for(d2) == P(None, "model")  # 3584 divisible
+    d3 = ParamDef((30, 577), ("layers", "q_fused"))
+    assert rules.spec_for(d3) == P(None, None)
+
+
+def test_opt_spec_adds_data_axis():
+    rules = ShardingRules(mode="fsdp", model_size=16, data_size=16)
+    d = ParamDef((4096, 4096), ("embed", "ffn"))
+    base = rules.spec_for(d)
+    opt = opt_spec_for(d, rules)
+    assert base == P("model", None)
+    assert opt == P("model", "data")     # ZeRO-1: moments shard further
+
+
+def test_choose_microbatches_scaling():
+    from repro.launch.mesh import small_mesh
+    from repro.launch.steps import choose_microbatches
+
+    mesh = small_mesh(("data", "model"), (1, 1))
+    cfg = get_config("pixtral-12b")
+    n = choose_microbatches(cfg, SHAPES["train_4k"], mesh)
+    assert n >= 1 and SHAPES["train_4k"].global_batch % n == 0

