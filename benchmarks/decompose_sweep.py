@@ -8,13 +8,25 @@ improvement = halo-communication-volume reduction of the optimal
 factorization over the greedy heuristic — the quantity Sec. 4.2 proves
 drives the end-to-end stencil speedups the paper measures (0-83%,
 geomean 16% on hardware).
+
+The sweep runs once per halo-pattern application in the unified registry
+(stencil, PENNANT), using each app's per-point flops and exchanged-field
+count, so new halo workloads join the sweep by registering themselves.
 """
 from __future__ import annotations
 
 import math
+import sys
+from pathlib import Path
 
-from repro.core.commvolume import halo_surface_volume
-from repro.core.decompose import greedy_factorization, optimal_factorization
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro import apps  # noqa: E402
+from repro.core.commvolume import halo_surface_volume  # noqa: E402
+from repro.core.decompose import (  # noqa: E402
+    greedy_factorization,
+    optimal_factorization,
+)
 
 ASPECTS = [1, 2, 4, 8, 16, 32]
 AREAS = [10**6, 10**7, 10**8, 2 * 10**8, 4 * 10**8]
@@ -31,7 +43,8 @@ def iteration_space(aspect: int, area_per_node: int, n_gpus: int
     return max(x, 1), max(y, 1)
 
 
-def modeled_step_time(lengths, factors, n_gpus) -> float:
+def modeled_step_time(lengths, factors, n_gpus, *, flops_per_point=5.0,
+                      fields=1) -> float:
     """End-to-end sweep-time model on the v5e fabric: bandwidth-bound
     stencil compute + halo exchange on ICI/DCI. This is what turns the
     scale-invariant volume ratio into the paper's Fig. 16/17 trends
@@ -39,8 +52,8 @@ def modeled_step_time(lengths, factors, n_gpus) -> float:
     from repro.core import machine as hw
 
     area = lengths[0] * lengths[1]
-    compute = (area / n_gpus) * 5 * 4 / hw.HBM_BW      # 5-pt, 4B reads
-    v = halo_surface_volume(lengths, factors) * 4       # bytes
+    compute = (area / n_gpus) * flops_per_point * 4 / hw.HBM_BW  # 4B reads
+    v = halo_surface_volume(lengths, factors) * 4 * fields       # bytes
     nodes = max(n_gpus // GPUS_PER_NODE, 1)
     # fraction of cut surface crossing node boundaries ~ 1 - 1/nodes
     cross = v * (1.0 - 1.0 / nodes)
@@ -51,15 +64,16 @@ def modeled_step_time(lengths, factors, n_gpus) -> float:
     return compute + comm
 
 
-def one_config(aspect, area, gpus) -> dict:
+def one_config(aspect, area, gpus, *, flops_per_point=5.0, fields=1) -> dict:
     lengths = iteration_space(aspect, area, gpus)
     opt = optimal_factorization(gpus, lengths)
     gre = greedy_factorization(gpus, 2)
-    v_opt = halo_surface_volume(lengths, opt)
-    v_gre = halo_surface_volume(lengths, gre)
+    v_opt = halo_surface_volume(lengths, opt) * fields
+    v_gre = halo_surface_volume(lengths, gre) * fields
     improvement = (v_gre - v_opt) / max(v_gre, 1e-9) * 100.0
-    t_opt = modeled_step_time(lengths, opt, gpus)
-    t_gre = modeled_step_time(lengths, gre, gpus)
+    kw = dict(flops_per_point=flops_per_point, fields=fields)
+    t_opt = modeled_step_time(lengths, opt, gpus, **kw)
+    t_gre = modeled_step_time(lengths, gre, gpus, **kw)
     return {
         "aspect": aspect, "area": area, "gpus": gpus,
         "lengths": lengths, "opt": opt, "greedy": gre,
@@ -82,19 +96,22 @@ def _gm_time(rows) -> float:
     return (1.0 - math.exp(-sum(logs) / len(logs))) * 100.0
 
 
-def run(report=print) -> dict:
-    rows = [one_config(a, ar, g)
+def sweep_app(app, report=print) -> dict:
+    fpp = float(app.meta.get("flops_per_point", 5.0))
+    fields = int(app.meta.get("halo_fields", 1))
+    rows = [one_config(a, ar, g, flops_per_point=fpp, fields=fields)
             for a in ASPECTS for ar in AREAS for g in GPUS]
     imps = sorted(r["improvement_pct"] for r in rows)
     timps = sorted(r["time_improvement_pct"] for r in rows)
-    report(f"configs: {len(rows)} (paper: 180)")
+    report(f"--- {app.name}: {len(rows)} configs (paper: 180), "
+           f"{fields} halo field(s), {fpp:.0f} flops/pt")
     report(f"comm-volume reduction: min {imps[0]:.1f}%  "
            f"median {imps[len(imps) // 2]:.1f}%  max {imps[-1]:.1f}%")
     report(f"modeled step-time improvement: min {timps[0]:.1f}%  "
            f"median {timps[len(timps) // 2]:.1f}%  max {timps[-1]:.1f}%  "
            f"(paper: 0-83%, geomean 16%)")
     report(f"geomean modeled improvement: {_gm_time(rows):.1f}%")
-    report("\nby aspect ratio (Fig. 15, modeled time):")
+    report("by aspect ratio (Fig. 15, modeled time):")
     for a in ASPECTS:
         sub = [r for r in rows if r["aspect"] == a]
         report(f"  1:{a:<3d} geomean {_gm_time(sub):6.1f}%")
@@ -111,6 +128,13 @@ def run(report=print) -> dict:
         "max_time_pct": timps[-1],
         "geomean_time_pct": _gm_time(rows), "rows": rows,
     }
+
+
+def run(report=print) -> dict:
+    out = {}
+    for app in apps.iter_apps(pattern="halo"):
+        out[app.name] = sweep_app(app, report)
+    return out
 
 
 if __name__ == "__main__":

@@ -11,6 +11,9 @@ devices (subprocess, so this process keeps 1 device):
     the shifts into cross-node traffic;
   * peak memory: heuristic placement materializes remote panels per step
     (the paper's OOM at 32 GPUs).
+
+The specified mapping comes from the unified app registry — the SAME parsed
+Mapple program the end-to-end runner uses — not from a parallel code path.
 """
 from __future__ import annotations
 
@@ -21,11 +24,15 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import GPU, Machine
-from repro.core.commvolume import MatmulProblem, cannon_volume
-from repro.matmul import cannon, runtime_heuristic_mapper
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro import apps  # noqa: E402
+from repro.core import GPU, Machine  # noqa: E402
+from repro.core.commvolume import MatmulProblem, cannon_volume  # noqa: E402
+from repro.matmul import runtime_heuristic_mapper  # noqa: E402
 
 REPO = Path(__file__).resolve().parent.parent
+PROC_SWEEP = (4, 16, 64)        # square counts; the paper sweeps 8..32 GPUs
 
 
 def cross_node_fraction(perm: np.ndarray, grid: tuple[int, int],
@@ -64,24 +71,23 @@ def max_link_load(perm: np.ndarray, grid: tuple[int, int],
 
 
 def analytic(report=print) -> dict:
+    app = apps.get("cannon")
     rows = []
-    for nodes, gpn in ((2, 2), (2, 4), (4, 4), (8, 4)):
-        n = nodes * gpn
-        q = int(round(n ** 0.5))
-        if q * q != n:
-            continue
+    for n in PROC_SWEEP:
+        nodes, gpn = app.machine_shape(n)
+        grid = app.tile_grid(n)
         machine = Machine(GPU, shape=(nodes, gpn))
-        spec = cannon.paper_mapper(machine, (q, q)).tile_permutation((q, q), n)
-        heur = runtime_heuristic_mapper(machine).tile_permutation((q, q), n)
-        f_spec = cross_node_fraction(spec, (q, q), gpn)
-        f_heur = cross_node_fraction(heur, (q, q), gpn)
-        l_spec = max_link_load(spec, (q, q), gpn)
-        l_heur = max_link_load(heur, (q, q), gpn)
+        spec = app.mapper(n).tile_permutation(grid, n)
+        heur = runtime_heuristic_mapper(machine).tile_permutation(grid, n)
+        f_spec = cross_node_fraction(spec, grid, gpn)
+        f_heur = cross_node_fraction(heur, grid, gpn)
+        l_spec = max_link_load(spec, grid, gpn)
+        l_heur = max_link_load(heur, grid, gpn)
         p = MatmulProblem(8192, 8192, 8192)
-        vol = cannon_volume(p, (q, q))
+        vol = cannon_volume(p, grid)
         # shift time ~ hot-link load x tile bytes / link bw
         rows.append({
-            "machine": f"{nodes}x{gpn}", "grid": f"{q}x{q}",
+            "machine": f"{nodes}x{gpn}", "grid": f"{grid[0]}x{grid[1]}",
             "cross_frac_spec": f_spec, "cross_frac_heur": f_heur,
             "hotlink_spec": l_spec, "hotlink_heur": l_heur,
             "cross_bytes_spec": vol * f_spec * 4,
@@ -102,14 +108,17 @@ def analytic(report=print) -> dict:
 
 WALLCLOCK_SNIPPET = r"""
 import time, numpy as np, jax, jax.numpy as jnp
+from repro import apps
 from repro.core import Machine, GPU
 from repro.matmul import cannon, runtime_heuristic_mapper
-from repro.matmul.common import build_grid, make_inputs
+from repro.matmul.common import MatmulGrid, build_grid, make_inputs
 
-m = Machine(GPU, shape=(2, 2))
+app = apps.get("cannon")
+m = Machine(GPU, shape=app.machine_shape(4))
 a, b = make_inputs(512, 512, 512, seed=0)
+plan = app.spmd_plan(4, devices=jax.devices()[:4])
 for name, grid in [
-    ("spec", cannon.grid_for(m, jax.devices()[:4])),
+    ("spec", MatmulGrid(mesh=plan.mesh, axis_names=plan.axis_names)),
     ("heur", build_grid(runtime_heuristic_mapper(m), (2, 2), ("x", "y"),
                         jax.devices()[:4])),
 ]:

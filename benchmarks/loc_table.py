@@ -1,9 +1,11 @@
 """Table 1 reproduction: mapper lines-of-code, Mapple vs low-level.
 
-Counts non-blank, non-comment lines (the paper's convention) of each
-application's Mapple program (benchmarks/mapple_programs/*.mapple) against
-its hand-written raw-JAX counterpart (benchmarks/lowlevel/*_raw.py), and
-verifies both express the SAME mapping by comparing device assignments.
+Iterates the unified application registry (``repro.apps``): each app's
+Mapple program LoC (the paper's non-blank, non-comment convention, via
+``MapperProgram.loc()``) is compared against its hand-written raw-JAX
+baseline fixture in ``benchmarks/lowlevel/*_raw.py``, and the two are
+verified to express the SAME mapping by comparing device-assignment grids
+at the fixture's machine scale.
 """
 from __future__ import annotations
 
@@ -13,67 +15,44 @@ from pathlib import Path
 
 import numpy as np
 
-HERE = Path(__file__).parent
-APPS = [
-    "cannon", "summa", "pumma", "johnson", "solomonik", "cosma",
-    "circuit", "stencil", "pennant",
-]
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro import apps  # noqa: E402
 
 
-def count_loc(path: Path) -> int:
-    out = 0
-    in_docstring = False
-    for raw in path.read_text().splitlines():
-        ln = raw.strip()
-        if not ln:
-            continue
-        if ln.startswith('"""') or ln.endswith('"""'):
-            quote_count = ln.count('"""')
-            if quote_count == 1:
-                in_docstring = not in_docstring
-            continue
-        if in_docstring or ln.startswith("#"):
-            continue
-        out += 1
-    return out
-
-
-def load_raw(app: str):
-    path = HERE / "lowlevel" / f"{app}_raw.py"
-    spec = importlib.util.spec_from_file_location(f"{app}_raw", path)
+def load_raw(app: "apps.Application"):
+    """Import an app's low-level baseline fixture module."""
+    path = app.lowlevel_path()
+    spec = importlib.util.spec_from_file_location(f"{app.name}_raw", path)
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)  # type: ignore[union-attr]
     return mod
 
 
-def verify_same_mapping(app: str) -> bool:
-    """Mapple program and raw module must produce identical device grids."""
-    from repro.core import dsl
-
+def verify_same_mapping(app: "apps.Application") -> bool:
+    """Mapple program and raw fixture must produce identical device grids."""
     raw = load_raw(app)
-    src = (HERE / "mapple_programs" / f"{app}.mapple").read_text()
-    prog = dsl.parse(src)
-    mapper = next(iter(prog.mappers.values()))
-    grid_shape = raw.GRID_SHAPE
-    raw_grid = raw.assignment_grid(grid_shape, raw.MACHINE_SHAPE)
     try:
-        dsl_grid = mapper.assignment_grid(grid_shape)
+        mapper = app.mapper()
+        dsl_grid = mapper.assignment_grid(raw.GRID_SHAPE)
     except Exception:
         return False
+    raw_grid = raw.assignment_grid(raw.GRID_SHAPE, raw.MACHINE_SHAPE)
     return bool(np.array_equal(raw_grid, dsl_grid))
 
 
 def run(report=print) -> dict:
     rows = []
-    for app in APPS:
-        mapple_loc = count_loc(HERE / "mapple_programs" / f"{app}.mapple")
-        raw_loc = count_loc(HERE / "lowlevel" / f"{app}_raw.py")
+    for app in apps.iter_apps():
+        mapple_loc = app.mapple_loc()
+        raw_loc = app.lowlevel_loc()
         same = verify_same_mapping(app)
-        rows.append((app, mapple_loc, raw_loc, raw_loc / mapple_loc, same))
+        rows.append((app.name, mapple_loc, raw_loc, raw_loc / mapple_loc,
+                     same))
     report(f"{'app':12s} {'mapple':>7s} {'low-level':>10s} {'ratio':>7s} "
            f"{'same-map':>9s}")
-    for app, m, r, ratio, same in rows:
-        report(f"{app:12s} {m:7d} {r:10d} {ratio:7.1f} {str(same):>9s}")
+    for name, m, r, ratio, same in rows:
+        report(f"{name:12s} {m:7d} {r:10d} {ratio:7.1f} {str(same):>9s}")
     avg_m = sum(r[1] for r in rows) / len(rows)
     avg_r = sum(r[2] for r in rows) / len(rows)
     report(f"{'AVG':12s} {avg_m:7.1f} {avg_r:10.1f} {avg_r / avg_m:7.1f}")

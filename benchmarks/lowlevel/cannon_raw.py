@@ -1,5 +1,11 @@
-"""Low-level (no-DSL) mapper for cannon: raw JAX equivalent of
-../mapple_programs/cannon.mapple."""
+"""Low-level (no-DSL) mapper for cannon — LoC-baseline fixture.
+
+The hand-written raw-JAX equivalent of the Mapple program registered
+for this app in repro.apps.definitions. Not imported by production
+code: benchmarks/loc_table.py counts its lines (Table 1) and checks
+its assignment_grid against the DSL mapper's; everything else goes
+through the registry pipeline.
+"""
 import itertools
 
 import numpy as np
@@ -15,10 +21,10 @@ def assign_point(point, space, machine_shape):
     cyclic over the gpu factors."""
     nodes, gpus = machine_shape
     # hand-derived node factorization for a 2D space on 2 nodes: (2, 1)
-    node_f = (2, 1) if space[0] >= space[1] else (1, 2)
+    node_f = (2, 1) if space[0] > space[1] else (1, 2)
     # per-node sub space and gpu factorization (2 gpus): (2, 1) or (1, 2)
     sub = (space[0] // node_f[0], space[1] // node_f[1])
-    gpu_f = (2, 1) if sub[0] >= sub[1] else (1, 2)
+    gpu_f = (2, 1) if sub[0] > sub[1] else (1, 2)
     nb = tuple(point[i] * node_f[i] // space[i] for i in range(2))
     gc = tuple(point[i] % gpu_f[i] for i in range(2))
     node_idx = nb[0] * node_f[1] + nb[1]

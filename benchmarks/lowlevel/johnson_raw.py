@@ -1,5 +1,11 @@
-"""Low-level (no-DSL) mapper for johnson: raw JAX equivalent of
-../mapple_programs/johnson.mapple."""
+"""Low-level (no-DSL) mapper for johnson — LoC-baseline fixture.
+
+The hand-written raw-JAX equivalent of the Mapple program registered
+for this app in repro.apps.definitions. Not imported by production
+code: benchmarks/loc_table.py counts its lines (Table 1) and checks
+its assignment_grid against the DSL mapper's; everything else goes
+through the registry pipeline.
+"""
 import itertools
 
 import numpy as np

@@ -1,27 +1,21 @@
 """Table 2 reproduction: mapper tuning headroom per application.
 
-For each of the nine applications, compare the default mapper against the
-best alternative Mapple expresses in a few lines — the paper's point is
-that the DSL makes this search cheap. The improvement metric is modeled
-step time on the v5e fabric (compute + cross-fabric communication), the
-same model validated against the dry-run artifacts in EXPERIMENTS.md.
+For every app in the unified registry, compare its default mapper against
+the best alternative Mapple expresses in a few lines — the paper's point is
+that the DSL makes this search cheap. Each :class:`~repro.apps.Application`
+carries the (default, tuned) communication-volume pair for the experiment
+(``app.tuning``); the improvement metric is modeled step time on the v5e
+fabric (compute + cross-fabric communication).
 """
 from __future__ import annotations
 
-import math
+import sys
+from pathlib import Path
 
-from repro.core import GPU, Machine
-from repro.core import machine as hw
-from repro.core.commvolume import (
-    MatmulProblem,
-    cannon_volume,
-    cosma_grid,
-    halo_surface_volume,
-    johnson_volume,
-    solomonik_volume,
-    summa_volume,
-)
-from repro.core.decompose import greedy_factorization, optimal_factorization
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro import apps  # noqa: E402
+from repro.core import machine as hw  # noqa: E402
 
 CHIPS = 64
 BYTES = 4
@@ -34,61 +28,21 @@ def model_time(flops_total: float, comm_elems: float, chips: int) -> float:
     return max(compute, comm) + 0.1 * min(compute, comm)
 
 
-def matmul_rows():
-    p = MatmulProblem(16384, 16384, 16384)
-    q = int(math.sqrt(CHIPS))
-    rows = []
-    # default vs tuned (per-algorithm tuning knob)
-    cfgs = {
-        "cannon": (cannon_volume(p, (q, q)), cannon_volume(p, (q, q))),
-        "summa": (summa_volume(p, (q, q)),
-                  summa_volume(p, (q, q), panel=4)),
-        "pumma": (summa_volume(p, (q, q)), summa_volume(p, (q, q))),
-        # johnson: default cube vs decompose-tuned grid
-        "johnson": (johnson_volume(p, (4, 4, 4)),
-                    johnson_volume(p, cosma_grid(p, CHIPS))),
-        # solomonik: c=1 (2D) vs tuned replication c=4
-        "solomonik": (solomonik_volume(p, (8, 8, 1)),
-                      solomonik_volume(p, (4, 4, 4))),
-        # cosma picks its own grid; baseline = balanced greedy grid
-        "cosma": (johnson_volume(p, tuple(greedy_factorization(CHIPS, 3))),
-                  johnson_volume(p, cosma_grid(p, CHIPS))),
-    }
-    for name, (v_def, v_tuned) in cfgs.items():
-        t_def = model_time(p.flops, v_def, CHIPS)
-        t_tun = model_time(p.flops, v_tuned, CHIPS)
-        rows.append((name, t_def / t_tun))
-    return rows
-
-
-def science_rows():
-    rows = []
-    # stencil/pennant: greedy grid vs decompose grid on a 1:8 space
-    for name, lengths in (("stencil", (4096, 32768)),
-                          ("pennant", (2048, 16384))):
-        v_def = halo_surface_volume(lengths, greedy_factorization(CHIPS, 2))
-        v_tun = halo_surface_volume(
-            lengths, optimal_factorization(CHIPS, lengths)
-        )
-        flops = 5.0 * lengths[0] * lengths[1] * 64  # 64 sweeps
-        t_def = model_time(flops, v_def * 64, CHIPS)
-        t_tun = model_time(flops, v_tun * 64, CHIPS)
-        rows.append((name, t_def / t_tun))
-    # circuit: memory-placement tuning (ZCMEM for the shared node charge
-    # avoids a device round trip — modeled as removing one gather pass)
-    wires, frac_external = 10_000_000, 0.1
-    v_def = wires * (1 + frac_external) * 2     # gather V + scatter Q
-    v_tun = wires * (1 + frac_external) * 2 * 0.75
-    flops = wires * 12.0
-    rows.append((
-        "circuit",
-        model_time(flops, v_def, CHIPS) / model_time(flops, v_tun, CHIPS),
-    ))
-    return rows
-
-
 def run(report=print) -> dict:
-    rows = matmul_rows() + science_rows()
+    rows = []
+    for app in apps.iter_apps():
+        if app.tuning is None:
+            continue
+        chips = CHIPS
+        try:
+            v_def, v_tuned = app.tuning(chips)
+        except ValueError:          # app cannot use CHIPS processors
+            chips = app.default_procs
+            v_def, v_tuned = app.tuning(chips)
+        flops = app.step_flops(chips)
+        t_def = model_time(flops, v_def, chips)
+        t_tun = model_time(flops, v_tuned, chips)
+        rows.append((app.name, t_def / t_tun))
     report(f"{'app':12s} {'tuned speedup':>14s}   (paper Table 2: 1.02-1.34x)")
     for name, sp in rows:
         report(f"{name:12s} {sp:13.2f}x")

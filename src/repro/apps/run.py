@@ -1,0 +1,168 @@
+"""End-to-end driver for the nine paper applications.
+
+Runs every selected app through the full pipeline —
+
+    dsl.parse  ->  Mapper  ->  translate.to_spmd  ->  commvolume
+
+— and prints the paper's Table-style LoC and communication-volume summary.
+
+    PYTHONPATH=src python -m repro.apps.run --app summa --procs 64
+    PYTHONPATH=src python -m repro.apps.run --all
+    PYTHONPATH=src python -m repro.apps.run --all --execute   # + numerics
+
+``--execute`` additionally runs each app's distributed kernel on fake CPU
+devices and checks it against its single-device reference (the flag must
+set XLA_FLAGS before JAX initializes, so use it from a fresh process).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def analyze(app, procs: int | None) -> dict:
+    """One app through parse -> map -> translate -> commvolume."""
+    from repro.core.translate import to_spmd
+
+    n = app.procs(procs)
+    note = ""
+    try:
+        app.tile_grid(n)
+    except ValueError:
+        note = f"(procs {n} unusable; using default {app.default_procs})"
+        n = app.default_procs
+    program = app.program(n)
+    plan = to_spmd(program, app.name, app.tile_grid(n), app.axis_names)
+    perm = plan.meta["device_permutation"]
+    return {
+        "app": app.name,
+        "kind": app.kind,
+        "procs": n,
+        "machine": app.machine_shape(n),
+        "grid": plan.meta["tile_grid"],
+        "mapper": plan.meta["mapper"],
+        "bijective": len(set(perm)) == len(perm),
+        "mesh": plan.mesh is not None,
+        "mapple_loc": program.loc(),
+        "lowlevel_loc": app.lowlevel_loc(),
+        "comm_volume": app.comm_volume(n),
+        "step_flops": app.step_flops(n),
+        "backpressure": plan.backpressure,
+        "memory_kinds": plan.memory_kinds,
+        "donate": plan.donate,
+        "note": note,
+    }
+
+
+def report_table(rows, report=print) -> None:
+    report(
+        f"{'app':10s} {'procs':>5s} {'grid':>12s} {'mapple':>7s} "
+        f"{'low-level':>10s} {'ratio':>6s} {'comm(elem)':>11s} "
+        f"{'bijective':>9s}"
+    )
+    for r in rows:
+        grid = "x".join(str(g) for g in r["grid"])
+        if r["lowlevel_loc"]:
+            raw_loc = f"{r['lowlevel_loc']:10d}"
+            ratio = f"{r['lowlevel_loc'] / max(r['mapple_loc'], 1):6.1f}"
+        else:                       # fixture unavailable (installed pkg)
+            raw_loc, ratio = f"{'-':>10s}", f"{'-':>6s}"
+        report(
+            f"{r['app']:10s} {r['procs']:5d} {grid:>12s} "
+            f"{r['mapple_loc']:7d} {raw_loc} {ratio} "
+            f"{r['comm_volume']:11.3g} {str(r['bijective']):>9s} {r['note']}"
+        )
+    avg_m = sum(r["mapple_loc"] for r in rows) / len(rows)
+    avg_r = sum(r["lowlevel_loc"] for r in rows) / len(rows)
+    if avg_r:
+        report(
+            f"{'AVG':10s} {'':5s} {'':>12s} {avg_m:7.1f} {avg_r:10.1f} "
+            f"{avg_r / avg_m:6.1f}"
+        )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.apps.run", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("--app", default=None, help="one application by name")
+    ap.add_argument("--all", action="store_true", help="all nine paper apps")
+    ap.add_argument("--procs", type=int, default=None,
+                    help="processor count (default: per-app paper scale)")
+    ap.add_argument("--execute", action="store_true",
+                    help="also run each kernel vs its reference on fake "
+                         "CPU devices")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered applications")
+    args = ap.parse_args(argv)
+
+    if args.procs is not None and args.procs < 1:
+        ap.error(f"--procs must be >= 1, got {args.procs}")
+
+    if args.execute:
+        # Must happen before JAX initializes its backends. Append to any
+        # existing XLA_FLAGS rather than silently losing the device count.
+        count = args.procs or 8
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={count}"
+            ).strip()
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    from repro import apps
+
+    if args.list:
+        for app in apps.iter_apps():
+            print(f"{app.name:10s} [{app.kind}/{app.pattern}] "
+                  f"{app.description}")
+        return 0
+
+    if args.app:
+        try:
+            selection = [apps.get(args.app)]
+        except KeyError:
+            ap.error(f"unknown app {args.app!r}; known: "
+                     f"{', '.join(sorted(apps.names()))}")
+    elif args.all:
+        selection = list(apps.iter_apps())
+    else:
+        ap.error("pass --app NAME, --all, or --list")
+
+    rows = [analyze(app, args.procs) for app in selection]
+    report_table(rows)
+
+    if not all(r["bijective"] for r in rows):
+        print("ERROR: non-bijective mapping produced", file=sys.stderr)
+        return 1
+
+    if args.execute:
+        from repro.apps import validate
+
+        print(f"\n{'app':10s} {'procs':>5s} {'max_err':>10s} {'ok':>4s}")
+        failed, ran = [], 0
+        for app, row in zip(selection, rows):
+            try:
+                res = validate.run(app, row["procs"])
+                ran += 1
+                print(f"{app.name:10s} {row['procs']:5d} "
+                      f"{res['max_err']:10.2e} {str(res['ok']):>4s}")
+                if not res["ok"]:
+                    failed.append(app.name)
+            except validate.SkipValidation as e:
+                print(f"{app.name:10s} {row['procs']:5d} {'—':>10s}  "
+                      f"skip: {e}")
+        if failed:
+            print(f"ERROR: numeric check failed: {failed}", file=sys.stderr)
+            return 1
+        if not ran:
+            print("ERROR: --execute validated nothing (no app had enough "
+                  "devices)", file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

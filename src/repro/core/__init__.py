@@ -30,7 +30,9 @@ from repro.core.mapper import (
     special_linearize3d_mapper,
     conditional_linearize3d_mapper,
 )
-from repro.core.translate import MappingPlan, LayoutSpec, mesh_from_mapper
+from repro.core.translate import (
+    MappingPlan, LayoutSpec, mesh_from_mapper, to_spmd,
+)
 from repro.core import dsl
 
 __all__ = [
@@ -46,5 +48,5 @@ __all__ = [
     "linear_cyclic_mapper", "hierarchical_block_mapper",
     "linearize_cyclic_mapper", "special_linearize3d_mapper",
     "conditional_linearize3d_mapper",
-    "MappingPlan", "LayoutSpec", "mesh_from_mapper", "dsl",
+    "MappingPlan", "LayoutSpec", "mesh_from_mapper", "to_spmd", "dsl",
 ]

@@ -40,6 +40,7 @@ from repro.core.tuples import Tup
 
 _TERNARY = re.compile(r"(?P<c>[^?\n=]+)\?(?P<a>[^:\n]+):(?P<b>.+)")
 _SIG_TYPE = re.compile(r"\b(Tuple|int|float)\s+(\w+)")
+_STAR_SUB = re.compile(r"\[\s*\*\s*(\w+)\s*\]")
 
 DIRECTIVES = (
     "IndexTaskMap", "TaskMap", "Region", "Layout",
@@ -92,6 +93,13 @@ def _desugar_ternary(line: str) -> str:
 def _clean_signature(line: str) -> str:
     """Strip C-style parameter types: def f(Tuple a, int b): -> def f(a, b):"""
     return _SIG_TYPE.sub(r"\2", line)
+
+
+def _desugar_star_subscript(line: str) -> str:
+    """`m[*idx]` -> `m[tuple(idx)]` — starred subscripts (the paper's tuple
+    unpacking idiom) only became Python syntax in 3.11; ProcSpace accepts
+    the equivalent tuple/Tup index directly."""
+    return _STAR_SUB.sub(r"[tuple(\1)]", line)
 
 
 class _SafeNamespace(dict):
@@ -151,7 +159,7 @@ def parse(source: str, *,
             while i < len(lines) and (
                 lines[i].startswith((" ", "\t")) or not lines[i].strip()
             ):
-                block.append(_desugar_ternary(lines[i]))
+                block.append(_desugar_star_subscript(_desugar_ternary(lines[i])))
                 i += 1
             _compile_mapping_fn(prog, ns, "\n".join(block))
             continue

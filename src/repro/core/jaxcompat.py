@@ -1,0 +1,40 @@
+"""Version portability shims for the JAX APIs this repo leans on.
+
+The translation layer targets `shard_map`, which moved twice across JAX
+releases:
+
+  * jax >= 0.6: top-level ``jax.shard_map(..., check_vma=...)``
+  * jax 0.4.x:  ``jax.experimental.shard_map.shard_map(..., check_rep=...)``
+
+Every shard_map call in the repo routes through :func:`shard_map` so the
+pipeline runs on whichever JAX the environment bakes in.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+
+def shard_map(f: Callable[..., Any], *, mesh: Any, in_specs: Any,
+              out_specs: Any, check_vma: bool = False) -> Callable[..., Any]:
+    """`jax.shard_map` on new JAX, `jax.experimental.shard_map` on 0.4.x.
+
+    The validity-check kwarg is dispatched by signature, not JAX version:
+    releases where ``jax.shard_map`` already existed but the kwarg was
+    still ``check_rep`` are handled too.
+    """
+    impl = getattr(jax, "shard_map", None)
+    if impl is None:
+        from jax.experimental.shard_map import shard_map as impl  # 0.4.x
+
+    import inspect
+
+    params = inspect.signature(impl).parameters
+    if "check_vma" in params:
+        kw = {"check_vma": check_vma}
+    elif "check_rep" in params:
+        kw = {"check_rep": check_vma}
+    else:
+        kw = {}
+    return impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -111,6 +111,88 @@ def owned_tiles(mapper: Mapper, ispace: Sequence[int], nprocs: int
     return out
 
 
+def to_spmd(
+    program,                      # repro.core.dsl.MapperProgram
+    task: str,
+    tile_grid: Sequence[int],
+    axis_names: Sequence[str],
+    operand_specs: Mapping[str, Any] | None = None,
+    out_operand_specs: Mapping[str, Any] | None = None,
+    devices: Sequence[Any] | None = None,
+) -> MappingPlan:
+    """End-to-end translation entry point: parsed Mapple program -> SPMD plan.
+
+    The full pipeline step used by the app registry
+    (``dsl.parse -> Mapper -> to_spmd -> commvolume``). Unlike
+    :func:`plan_from_program` this always succeeds on machines with too few
+    physical devices: the mapping function is still evaluated over the whole
+    tile grid and validated as a bijection, and the resulting device
+    permutation is recorded in ``meta['device_permutation']``; the concrete
+    ``jax.sharding.Mesh`` is only materialized when enough devices exist
+    (``mesh`` is ``None`` on an abstract plan).
+    """
+    mapper_name = program.index_task_maps.get(task)
+    if mapper_name is None:
+        raise KeyError(f"no IndexTaskMap for task {task!r}")
+    mapper = program.mappers[mapper_name]
+    tile_grid = tuple(int(t) for t in tile_grid)
+    n = int(np.prod(tile_grid))
+    perm = device_permutation(mapper, tile_grid, n)
+
+    mesh = None
+    if devices is None:
+        try:
+            import jax
+
+            devices = jax.devices()
+        except Exception:
+            devices = []
+    if len(devices) >= n:
+        import jax
+
+        dev_arr = np.asarray(
+            list(devices[:n]), dtype=object
+        )[perm].reshape(tile_grid)
+        mesh = jax.sharding.Mesh(dev_arr, tuple(axis_names))
+
+    if operand_specs is None or out_operand_specs is None:
+        try:
+            from jax.sharding import PartitionSpec as P
+
+            default_spec = P(*axis_names)
+        except Exception:
+            default_spec = tuple(axis_names)
+        if operand_specs is None:
+            operand_specs = {"arg0": default_spec, "arg1": default_spec}
+        if out_operand_specs is None:
+            out_operand_specs = {"out": default_spec}
+
+    memory_kinds = {
+        arg: mem for (t, arg), (_, mem) in program.regions.items() if t == task
+    }
+    layouts = {
+        arg: spec for (t, arg), spec in program.layouts.items() if t == task
+    }
+    donate = tuple(arg for (t, arg) in program.garbage_collect if t == task)
+    return MappingPlan(
+        mesh=mesh,
+        axis_names=tuple(axis_names),
+        in_specs=dict(operand_specs),
+        out_specs=dict(out_operand_specs),
+        memory_kinds=memory_kinds,
+        layouts=layouts,
+        donate=donate,
+        backpressure=program.backpressure.get(task, 2),
+        meta={
+            "mapper": mapper_name,
+            "task": task,
+            "tile_grid": tile_grid,
+            "nprocs": n,
+            "device_permutation": perm,
+        },
+    )
+
+
 def plan_from_program(
     program,                      # repro.core.dsl.MapperProgram
     task: str,

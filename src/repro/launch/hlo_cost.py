@@ -36,7 +36,10 @@ _CONDITION = re.compile(r"condition=%?([\w.\-]+)")
 _BODY = re.compile(r"body=%?([\w.\-]+)")
 _LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _LHS_BDIMS = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
-_OPERANDS = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
+# Older XLA prints operand types inside call parens:
+#   dot(f32[64,64]{1,0} %lhs, f32[64,64]{1,0} %rhs)
+_DOT_CALL = re.compile(r"\bdot(?:-general)?\(([^)]*)\)")
+_PCT_NAME = re.compile(r"%([\w.\-]+)")
 _CONSTANT = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
 
 VIEW_OPS = {
@@ -133,16 +136,24 @@ def _dot_flops(line: str, symbols: dict[str, list[int]]) -> float:
     out_elems = 1
     for d in dims:
         out_elems *= d
-    ops = _OPERANDS.search(line)
     contraction = 1
-    if ops:
-        lhs = ops.group(1).split(",")[0].strip().lstrip("%")
-        lhs_dims = symbols.get(lhs)
-        cd = _LHS_CDIMS.search(line)
-        if lhs_dims is not None and cd is not None:
-            for idx in cd.group(1).split(","):
-                if idx and int(idx) < len(lhs_dims):
-                    contraction *= lhs_dims[int(idx)]
+    call = _DOT_CALL.search(line)
+    lhs_dims = None
+    if call:
+        operands = call.group(1)
+        # Operand types, when printed, give the lhs shape directly; fall
+        # back to the shape recorded at the lhs variable's definition.
+        name_m = _PCT_NAME.search(operands)
+        first_shape = _SHAPE_TOKEN.search(operands)
+        if first_shape and (not name_m or first_shape.start() < name_m.start()):
+            lhs_dims = [int(d) for d in first_shape.group(2).split(",") if d]
+        elif name_m:
+            lhs_dims = symbols.get(name_m.group(1))
+    cd = _LHS_CDIMS.search(line)
+    if lhs_dims is not None and cd is not None:
+        for idx in cd.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contraction *= lhs_dims[int(idx)]
     return 2.0 * out_elems * contraction
 
 

@@ -17,8 +17,16 @@ from repro.models.config import ModelConfig
 from repro.models.params import ParamDef, normal_init
 from repro.models.sharding import constrain
 from repro.models import layers
+from repro.core.jaxcompat import shard_map
 
 CAPACITY_FACTOR = 1.25
+
+# Below this per-group token count the dense dispatch path uses full
+# capacity (C = Ng): routing is then exact (no overflow dropping), at the
+# cost of a (G, E, Ng, D) buffer — negligible up to this bound. Above it
+# the fixed-capacity production behavior applies, so outputs can differ
+# across this boundary by design (dropped overflow tokens).
+EXACT_DISPATCH_MAX_TOKENS = 512
 
 
 def moe_schema(cfg: ModelConfig) -> dict:
@@ -148,7 +156,7 @@ def _moe_shard_map(params, x, cfg: ModelConfig, mesh, batch_axes, ep, dp):
     x_spec = P(batch_axes if batch_axes else None, "model", None)
     router_spec = P(None, None)
     w_spec = P("model", None, None)
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, router_spec, w_spec, w_spec, w_spec),
         out_specs=(x_spec, P()),
@@ -205,6 +213,12 @@ def _moe_dense(params, x: jax.Array, cfg: ModelConfig):
     # (N*K, E) one-hot — at 1M tokens x 64 experts that tensor alone
     # would blow past HBM)
     C = capacity(Ng, cfg.n_experts, K)
+    if Ng <= EXACT_DISPATCH_MAX_TOKENS:
+        # Small-token path (decode steps, small-scale tests): full capacity.
+        # Fixed-capacity dropping at tiny N would make teacher-forced decode
+        # diverge from the forward pass; the (G, E, Ng, D) buffer is cheap
+        # at this scale.
+        C = Ng
     NgK = Ng * K
     e_flat = expert_idx.reshape(G, NgK)                         # (G, NgK)
     tok_flat = jnp.broadcast_to(

@@ -69,8 +69,27 @@ def layer_barrier(tree):
     if not _LAYER_BARRIER:
         return tree
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    leaves = list(jax.lax.optimization_barrier(tuple(leaves)))
+    leaves = list(_diff_barrier(tuple(leaves)))
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# optimization_barrier only gained a differentiation rule in newer JAX;
+# a custom_vjp (barrier the cotangents symmetrically, matching upstream
+# semantics) keeps the layer barrier usable under value_and_grad here.
+@jax.custom_vjp
+def _diff_barrier(leaves: tuple):
+    return jax.lax.optimization_barrier(leaves)
+
+
+def _diff_barrier_fwd(leaves: tuple):
+    return _diff_barrier(leaves), None
+
+
+def _diff_barrier_bwd(_, cts):
+    return (jax.lax.optimization_barrier(cts),)
+
+
+_diff_barrier.defvjp(_diff_barrier_fwd, _diff_barrier_bwd)
 
 
 def set_sequence_sharding(axis: str | None) -> None:

@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.mapper import block_mapper
 from repro.core.pspace import ProcSpace
 from repro.matmul.common import MatmulGrid, build_grid
+from repro.core.jaxcompat import shard_map
 
 AXES = ("x",)
 
@@ -114,7 +115,7 @@ def circuit_body(cfg: CircuitConfig, n_pieces: int):
 
 
 def run(state: CircuitState, grid: MatmulGrid, cfg: CircuitConfig) -> jax.Array:
-    fn = jax.shard_map(
+    fn = shard_map(
         circuit_body(cfg, grid.shape[0]),
         mesh=grid.mesh,
         in_specs=(P("x"), P("x"), P("x"), P("x"), P("x"), P("x")),

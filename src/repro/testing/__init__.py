@@ -1,0 +1,1 @@
+"""Test-support utilities (hypothesis fallback for hermetic environments)."""

@@ -1,0 +1,138 @@
+"""Minimal, deterministic stand-in for ``hypothesis`` when it is absent.
+
+The test suite property-tests the processor-space algebra and the
+communication-volume models with ``hypothesis``. That dependency is declared
+in ``pyproject.toml`` and installed in CI, but hermetic environments (the
+container this repo is developed in) cannot pip-install. This module
+implements exactly the strategy surface the tests use — ``integers``,
+``sampled_from``, ``lists`` (+ ``.map``), ``data`` — and a ``@given`` that
+replays a fixed number of deterministically seeded examples.
+
+It is NOT a shrinking property-testing engine: failures report the drawn
+values but are not minimized. ``tests/conftest.py`` installs it into
+``sys.modules`` only when the real ``hypothesis`` is missing, so CI always
+runs the real engine.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+import zlib
+from typing import Any, Callable, Sequence
+
+_DEFAULT_MAX_EXAMPLES = 100
+_ATTR = "_mapple_max_examples"
+
+
+class SearchStrategy:
+    """A strategy is just a draw function over a seeded ``random.Random``."""
+
+    def __init__(self, draw: Callable[[random.Random], Any]) -> None:
+        self._draw = draw
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        def draw(rng: random.Random) -> Any:
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too restrictive")
+
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    pool = list(elements)
+    return SearchStrategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rng: random.Random) -> list:
+        n = rng.randint(min_size, max_size)
+        return [elements._draw(rng) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+class DataObject:
+    """Interactive draws inside a test body (``st.data()``)."""
+
+    def __init__(self, rng: random.Random) -> None:
+        self._rng = rng
+
+    def draw(self, strategy: SearchStrategy, label: str | None = None) -> Any:
+        return strategy._draw(self._rng)
+
+
+def data() -> SearchStrategy:
+    return SearchStrategy(lambda rng: DataObject(rng))
+
+
+def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+             deadline: Any = None, **_: Any) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        setattr(fn, _ATTR, max_examples)
+        return fn
+
+    return deco
+
+
+def given(**strategies: SearchStrategy) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        def wrapper(*args: Any, **kwargs: Any) -> None:
+            n = getattr(wrapper, _ATTR, None) or getattr(
+                fn, _ATTR, _DEFAULT_MAX_EXAMPLES
+            )
+            base = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            for i in range(n):
+                rng = random.Random((base << 20) | i)
+                drawn = {k: s._draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:  # annotate with the failing example
+                    shown = {
+                        k: v for k, v in drawn.items()
+                        if not isinstance(v, DataObject)
+                    }
+                    raise AssertionError(
+                        f"falsifying example (#{i}): {shown!r}"
+                    ) from e
+
+        # Copy identity but NOT __wrapped__ (pytest would then introspect
+        # the original signature and treat drawn arguments as fixtures).
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` in ``sys.modules``."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "lists", "data"):
+        setattr(st, name, globals()[name])
+    st.SearchStrategy = SearchStrategy
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    mod.__mapple_fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

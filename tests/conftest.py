@@ -1,0 +1,22 @@
+"""Shared test configuration.
+
+Prefers the real ``hypothesis`` engine (installed in CI via pyproject);
+in hermetic environments without it, installs the deterministic fallback
+from ``repro.testing.hypothesis_fallback`` so the property tests still run.
+"""
+import os
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro.testing import hypothesis_fallback
+
+    hypothesis_fallback.install()
