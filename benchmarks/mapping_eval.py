@@ -1,0 +1,189 @@
+"""Microbenchmark: vectorized vs per-point mapper grid evaluation.
+
+Quantifies the mapping-IR refactor (docs/mapping_ir.md): every
+``Mapper.assignment_grid`` call evaluates the mapping function over the
+whole iteration grid in ONE batched pass of NumPy index arithmetic
+(``ProcSpace.to_root_batch``) instead of one Python call per iteration
+point. This harness times both paths on production-size tile grids,
+verifies they are bit-identical, and cross-checks every registry app's
+device permutation between the two paths.
+
+    PYTHONPATH=src python benchmarks/mapping_eval.py            # full
+    PYTHONPATH=src python benchmarks/mapping_eval.py --quick    # CI smoke
+
+Writes ``BENCH_mapping.json`` (override with ``--json``). In full mode the
+headline case — a 64x64x64 iteration grid — must reach a >=50x speedup or
+the script exits non-zero; bit-identity failures always exit non-zero.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro import apps  # noqa: E402
+from repro.core import (  # noqa: E402
+    GPU,
+    Machine,
+    block_cyclic_mapper,
+    block_mapper,
+    cyclic_mapper,
+    hierarchical_block_mapper,
+    linearize_cyclic_mapper,
+)
+
+SPEEDUP_TARGET = 50.0        # acceptance floor for the 64^3 headline case
+HEADLINE = "cyclic3d_64x64x64"
+
+
+def _cases(quick: bool):
+    """(name, mapper, ispace) benchmark cases; headline last for the log."""
+    g2 = (16, 16) if quick else (64, 64)
+    g3 = (16, 16, 16) if quick else (64, 64, 64)
+    m2 = Machine(GPU, shape=(4, 4))
+    m3 = Machine(GPU, shape=(4, 4, 4))
+    tag2 = "x".join(map(str, g2))
+    tag3 = "x".join(map(str, g3))
+    return [
+        (f"block2d_{tag2}", block_mapper(m2, "block2d"), g2),
+        (f"blockcyclic2d_{tag2}", block_cyclic_mapper(m2, "blockcyclic2d"), g2),
+        (f"hierarchical2d_{tag2}",
+         hierarchical_block_mapper(m2, g2, "hierarchical2d"), g2),
+        (f"linearize_cyclic2d_{tag2}",
+         linearize_cyclic_mapper(m2, "linearize_cyclic2d"), g2),
+        (f"cyclic3d_{tag3}", cyclic_mapper(m3, "cyclic3d"), g3),
+    ]
+
+
+def _time_once(fn) -> tuple[float, np.ndarray]:
+    t0 = time.perf_counter()
+    out = fn()
+    return time.perf_counter() - t0, out
+
+
+def bench_cases(quick: bool, report=print) -> list[dict]:
+    rows = []
+    report(f"{'case':28s} {'points':>9s} {'scalar_ms':>10s} "
+           f"{'batched_ms':>10s} {'cached_us':>9s} {'speedup':>8s} {'equal':>5s}")
+    for name, mapper, ispace in _cases(quick):
+        t_scalar, g_scalar = _time_once(
+            lambda: mapper.assignment_grid(
+                ispace, vectorized=False, use_cache=False)
+        )
+        t_batch, g_batch = _time_once(
+            lambda: mapper.assignment_grid(ispace, use_cache=False)
+        )
+        path = mapper.last_eval_path
+        mapper.assignment_grid(ispace)                       # prime the cache
+        t_cached, _ = _time_once(lambda: mapper.assignment_grid(ispace))
+        equal = bool(np.array_equal(g_scalar, g_batch))
+        speedup = t_scalar / t_batch if t_batch > 0 else float("inf")
+        rows.append({
+            "case": name,
+            "points": int(np.prod(ispace)),
+            "scalar_ms": t_scalar * 1e3,
+            "batched_ms": t_batch * 1e3,
+            "cached_us": t_cached * 1e6,
+            "speedup": speedup,
+            "bit_identical": equal,
+            "path": path,
+        })
+        report(f"{name:28s} {rows[-1]['points']:9d} {t_scalar*1e3:10.1f} "
+               f"{t_batch*1e3:10.2f} {t_cached*1e6:9.1f} {speedup:8.1f} "
+               f"{str(equal):>5s}")
+    return rows
+
+
+def check_registry_apps(report=print) -> list[dict]:
+    """Every registry app's device permutation, scalar vs batched path."""
+    rows = []
+    for app in apps.iter_apps():
+        for procs in (app.default_procs, 64):
+            try:
+                grid = app.tile_grid(procs)
+            except ValueError:
+                continue
+            mapper = app.mapper(procs)
+            scalar = mapper.assignment_grid(
+                grid, vectorized=False, use_cache=False).reshape(-1)
+            batched = mapper.assignment_grid(grid, use_cache=False).reshape(-1)
+            rows.append({
+                "app": app.name,
+                "procs": procs,
+                "grid": list(grid),
+                "bit_identical": bool(np.array_equal(scalar, batched)),
+                "path": mapper.last_eval_path,
+            })
+    bad = [r for r in rows if not r["bit_identical"]]
+    fell_back = [r["app"] for r in rows if r["path"] != "vectorized"]
+    report(f"registry permutations: {len(rows)} checked, "
+           f"{len(rows) - len(bad)} bit-identical, "
+           f"{len(rows) - len(fell_back)} vectorized"
+           + (f"; MISMATCH: {bad}" if bad else "")
+           + (f"; FELL BACK: {fell_back}" if fell_back else ""))
+    return rows
+
+
+def run(quick: bool = True, report=print) -> dict:
+    cases = bench_cases(quick, report)
+    app_rows = check_registry_apps(report)
+    headline = next((r for r in cases if r["case"] == HEADLINE), None)
+    result = {
+        "mode": "quick" if quick else "full",
+        "speedup_target": SPEEDUP_TARGET,
+        "headline": headline,
+        "cases": cases,
+        "registry_apps": app_rows,
+        "all_bit_identical": all(
+            r["bit_identical"] for r in cases + app_rows
+        ),
+        # The headline property is that these mappers actually VECTORIZE;
+        # bit-identity alone would pass vacuously if a regression made every
+        # evaluation fall back to the per-point interpreter.
+        "all_vectorized": all(
+            r["path"] == "vectorized" for r in cases + app_rows
+        ),
+    }
+    if headline is not None:
+        report(f"headline {HEADLINE}: {headline['speedup']:.1f}x "
+               f"(target >= {SPEEDUP_TARGET:.0f}x)")
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="small grids for the CI smoke lane (no speedup floor)")
+    ap.add_argument("--json", default="BENCH_mapping.json",
+                    help="output path for the machine-readable results")
+    args = ap.parse_args(argv)
+
+    result = run(quick=args.quick)
+    Path(args.json).write_text(json.dumps(result, indent=2) + "\n")
+    print(f"wrote {args.json}")
+
+    if not result["all_bit_identical"]:
+        print("ERROR: batched path diverges from per-point path",
+              file=sys.stderr)
+        return 1
+    if not result["all_vectorized"]:
+        print("ERROR: a vectorizable mapper fell back to the per-point "
+              "interpreter (see 'path' fields)", file=sys.stderr)
+        return 1
+    headline = result["headline"]
+    if not args.quick and headline is not None \
+            and headline["speedup"] < SPEEDUP_TARGET:
+        print(f"ERROR: headline speedup {headline['speedup']:.1f}x "
+              f"< {SPEEDUP_TARGET:.0f}x", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,6 +20,7 @@ from benchmarks import (  # noqa: E402
     heuristic_gap,
     loc_table,
     mapper_tuning,
+    mapping_eval,
     roofline_report,
 )
 
@@ -30,6 +31,8 @@ SECTIONS = {
                       heuristic_gap.run),
     "decompose_sweep": ("Figs 14-17: decompose vs Algorithm 1 (180 configs)",
                         decompose_sweep.run),
+    "mapping_eval": ("Mapping IR: vectorized vs per-point grid evaluation",
+                     mapping_eval.run),
     "roofline": ("Roofline table (from dry-run artifacts)",
                  roofline_report.run),
 }
@@ -62,8 +65,11 @@ def microbench(report=print) -> list[tuple[str, float, str]]:
     m = Machine(GPU, shape=(16, 16))
     mapper = block_mapper(m)
     timeit("mapper_eval_grid_16x16",
+           lambda: mapper.assignment_grid((16, 16), use_cache=False),
+           derived="256-point tile->device evaluation (vectorized, uncached)")
+    timeit("mapper_eval_grid_16x16_cached",
            lambda: mapper.assignment_grid((16, 16)),
-           derived="256-point tile->device evaluation")
+           derived="cache hit (the to_spmd steady state)")
     a = jnp.ones((256, 256), jnp.float32)
     b = jnp.ones((256, 256), jnp.float32)
     timeit("pallas_matmul_256_interp", lambda: ops.matmul(a, b), n=3,

@@ -51,6 +51,8 @@ def analyze(app, procs: int | None) -> dict:
         "backpressure": plan.backpressure,
         "memory_kinds": plan.memory_kinds,
         "donate": plan.donate,
+        "operands": tuple(sorted(plan.in_specs)),
+        "mapper_ir": plan.meta["mapper_ir"],
         "note": note,
     }
 
@@ -94,6 +96,9 @@ def main(argv=None) -> int:
     ap.add_argument("--execute", action="store_true",
                     help="also run each kernel vs its reference on fake "
                          "CPU devices")
+    ap.add_argument("--show-ir", action="store_true",
+                    help="print each mapper's recorded transformation IR "
+                         "(the inspectable ProcSpace op programs)")
     ap.add_argument("--list", action="store_true",
                     help="list registered applications")
     args = ap.parse_args(argv)
@@ -133,6 +138,13 @@ def main(argv=None) -> int:
 
     rows = [analyze(app, args.procs) for app in selection]
     report_table(rows)
+
+    if args.show_ir:
+        print("\nmapper transformation IR (root shape + recorded ops):")
+        for r in rows:
+            print(f"[{r['app']}] operands={','.join(r['operands'])}")
+            for line in r["mapper_ir"].splitlines():
+                print(f"  {line}")
 
     if not all(r["bijective"] for r in rows):
         print("ERROR: non-bijective mapping produced", file=sys.stderr)

@@ -103,9 +103,29 @@ _HOOKS = {
 }
 
 
+def check_batched_equivalence(app, procs: int) -> None:
+    """Certify the vectorized mapper path: the batched assignment grid must
+    be bit-identical to the per-point interpreter before we trust the mesh
+    built from it."""
+    import numpy as np
+
+    grid_shape = app.tile_grid(procs)
+    mapper = app.mapper(procs)
+    batched = mapper.assignment_grid(grid_shape, use_cache=False)
+    scalar = mapper.assignment_grid(
+        grid_shape, vectorized=False, use_cache=False
+    )
+    if not np.array_equal(batched, scalar):
+        raise AssertionError(
+            f"{app.name}: batched mapper evaluation diverges from the "
+            f"per-point path on grid {grid_shape}"
+        )
+
+
 def run(app, procs: int | None = None) -> dict:
     """Execute one app's kernel under its DSL-derived mesh vs reference."""
     if app.validate is None:
         raise SkipValidation("no validation hook registered")
     n = app.procs(procs)
+    check_batched_equivalence(app, n)
     return _HOOKS[app.validate](app, n)

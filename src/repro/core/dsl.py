@@ -189,7 +189,11 @@ def _compile_mapping_fn(prog: MapperProgram, ns: _SafeNamespace, block: str) -> 
     def fn(ipoint: Tup, ispace: Tup):
         return raw_fn(ipoint, ispace)
 
-    prog.mappers[fn_name] = Mapper(fn_name, fn)
+    # Snapshot the spaces declared so far: the mapper body closes over them,
+    # and they carry the transformation IR that Mapper.describe() prints.
+    # The compiled body also runs unchanged on a batched Tup (vectorized
+    # grid evaluation) because all Tup/ProcSpace operations broadcast.
+    prog.mappers[fn_name] = Mapper(fn_name, fn, spaces=dict(prog.spaces))
 
 
 def _parse_directive(prog: MapperProgram, line: str) -> None:

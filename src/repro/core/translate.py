@@ -21,6 +21,7 @@ remaining Mapple directives translate to:
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Any, Mapping, Sequence
 
 import numpy as np
@@ -102,13 +103,51 @@ def owned_tiles(mapper: Mapper, ispace: Sequence[int], nprocs: int
     """Many-to-one case: tiles owned by each device (cyclic distributions).
 
     Used by shard_map bodies that iterate over their owned tiles when the
-    iteration grid is larger than the processor grid.
+    iteration grid is larger than the processor grid. Consumes the cached
+    vectorized assignment grid and groups points with one stable argsort
+    (per-device point order stays row-major, as the kernels expect).
     """
     grid = mapper.assignment_grid(ispace)
-    out: dict[int, list[tuple[int, ...]]] = {d: [] for d in range(nprocs)}
-    for pt in np.ndindex(*grid.shape):
-        out[int(grid[pt])].append(pt)
-    return out
+    flat = grid.reshape(-1)
+    if flat.size and (flat.min() < 0 or flat.max() >= nprocs):
+        raise ValueError(
+            f"mapper {mapper.name} assigns device ids outside [0, {nprocs})"
+        )
+    order = np.argsort(flat, kind="stable")
+    pts = np.stack(np.unravel_index(order, grid.shape), axis=1)
+    bounds = np.searchsorted(flat[order], np.arange(nprocs + 1))
+    return {
+        d: [tuple(int(x) for x in row) for row in pts[bounds[d]:bounds[d + 1]]]
+        for d in range(nprocs)
+    }
+
+
+#: Mapple directives don't distinguish inputs from outputs, so the default
+#: operand-spec derivation uses a NAMING CONVENTION: exactly ``out`` or
+#: ``out<digits>`` is an output operand; everything else (``arg0``,
+#: ``output_mask``, ...) is an input. Matched exactly — never by prefix —
+#: so input names that merely start with "out" are not silently dropped.
+_OUT_OPERAND = re.compile(r"^out\d*$")
+
+
+def is_output_operand(name: str) -> bool:
+    return _OUT_OPERAND.fullmatch(name) is not None
+
+
+def declared_operands(program, task: str) -> tuple[str, ...]:
+    """Operand names a task's Region/Layout/GarbageCollect directives declare.
+
+    This is the ground truth for default operand specs in :func:`to_spmd` —
+    the previous hardcoded ``arg0``/``arg1`` defaults apply only when the
+    program declares nothing for the task. Outputs are recognized by the
+    :data:`_OUT_OPERAND` naming convention.
+    """
+    names = (
+        {arg for (t, arg) in program.regions if t == task}
+        | {arg for (t, arg) in program.layouts if t == task}
+        | {arg for (t, arg) in program.garbage_collect if t == task}
+    )
+    return tuple(sorted(names))
 
 
 def to_spmd(
@@ -162,10 +201,13 @@ def to_spmd(
             default_spec = P(*axis_names)
         except Exception:
             default_spec = tuple(axis_names)
+        declared = declared_operands(program, task)
         if operand_specs is None:
-            operand_specs = {"arg0": default_spec, "arg1": default_spec}
+            names = tuple(a for a in declared if not is_output_operand(a))
+            operand_specs = {arg: default_spec for arg in names or ("arg0", "arg1")}
         if out_operand_specs is None:
-            out_operand_specs = {"out": default_spec}
+            outs = tuple(a for a in declared if is_output_operand(a)) or ("out",)
+            out_operand_specs = {arg: default_spec for arg in outs}
 
     memory_kinds = {
         arg: mem for (t, arg), (_, mem) in program.regions.items() if t == task
@@ -189,6 +231,7 @@ def to_spmd(
             "tile_grid": tile_grid,
             "nprocs": n,
             "device_permutation": perm,
+            "mapper_ir": mapper.describe(),
         },
     )
 

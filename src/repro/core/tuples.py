@@ -8,21 +8,43 @@ Mapple mapping functions are written with tuple arithmetic, e.g.::
 
 All operators are elementwise; division is floor division (the paper's
 index arithmetic is over naturals). Scalars broadcast.
+
+A :class:`Tup` may also be *batched*: any component may be a NumPy array
+carrying a leading batch axis, in which case every operator broadcasts
+elementwise per component over the whole batch. This is how the mapper
+layer evaluates a mapping function over a full iteration grid in one
+vectorized pass (see docs/mapping_ir.md) — the same DSL body runs
+unchanged on a scalar point or on B points at once.
 """
 from __future__ import annotations
 
 from typing import Iterable, Sequence, Union
 
+import numpy as np
+
 Scalar = int
 TupLike = Union["Tup", Sequence[int], Scalar]
 
 
-def _coerce(other: TupLike, n: int) -> tuple[int, ...]:
+def as_index_component(v):
+    """One index/Tup component: a Python int, or a batch axis as an int64
+    array. This is THE coercion rule for fractional DSL index values —
+    shared by Tup and ProcSpace's batched indexing so the scalar and
+    batched paths can never diverge."""
+    if isinstance(v, np.ndarray) and v.ndim > 0:
+        if v.dtype.kind == "f":
+            # Match int()'s truncation; DSL values are naturals, so == floor.
+            v = np.trunc(v)
+        return v.astype(np.int64, copy=False)
+    return int(v)
+
+
+def _coerce(other: TupLike, n: int) -> tuple:
     if isinstance(other, Tup):
         vals = other._vals
     elif isinstance(other, (list, tuple)):
-        vals = tuple(int(v) for v in other)
-    elif isinstance(other, int):
+        vals = tuple(as_index_component(v) for v in other)
+    elif isinstance(other, (int, np.integer)):
         return (int(other),) * n
     else:
         # ProcSpace coerces via its .size (duck-typed to avoid circular import)
@@ -37,12 +59,15 @@ def _coerce(other: TupLike, n: int) -> tuple[int, ...]:
 
 
 class Tup:
-    """Immutable integer tuple with elementwise arithmetic."""
+    """Immutable integer tuple with elementwise arithmetic.
+
+    Components are Python ints, or (B,)-shaped int64 arrays when batched.
+    """
 
     __slots__ = ("_vals",)
 
     def __init__(self, vals: Iterable[int]) -> None:
-        object.__setattr__(self, "_vals", tuple(int(v) for v in vals))
+        object.__setattr__(self, "_vals", tuple(as_index_component(v) for v in vals))
 
     # -------------------------------------------------------------- protocol
     def __iter__(self):
@@ -68,6 +93,27 @@ class Tup:
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return f"Tup{self._vals}"
+
+    # ---------------------------------------------------------------- batching
+    @property
+    def is_batched(self) -> bool:
+        return any(isinstance(v, np.ndarray) for v in self._vals)
+
+    @property
+    def batch_size(self) -> int | None:
+        """Leading batch extent, or None for a scalar Tup."""
+        for v in self._vals:
+            if isinstance(v, np.ndarray):
+                return int(v.shape[0])
+        return None
+
+    @classmethod
+    def grid(cls, extents: Sequence[int]) -> "Tup":
+        """Batched Tup enumerating every point of ``extents`` in row-major
+        order — rank len(extents), batch size prod(extents)."""
+        extents = tuple(int(e) for e in extents)
+        idx = np.indices(extents, dtype=np.int64).reshape(len(extents), -1)
+        return cls(idx)
 
     # ------------------------------------------------------------ arithmetic
     def _zip(self, other: TupLike, op) -> "Tup":
@@ -107,13 +153,13 @@ class Tup:
         return self._zip(other, lambda a, b: a % b)
 
     # ----------------------------------------------------------- conveniences
-    def prod(self) -> int:
+    def prod(self):
         out = 1
         for v in self._vals:
-            out *= v
+            out = out * v
         return out
 
-    def linearize(self, extents: TupLike) -> int:
+    def linearize(self, extents: TupLike):
         """Row-major linearization of this point within ``extents``."""
         ex = _coerce(extents, len(self._vals))
         out = 0
@@ -121,5 +167,5 @@ class Tup:
             out = out * e + v
         return out
 
-    def as_tuple(self) -> tuple[int, ...]:
+    def as_tuple(self) -> tuple:
         return self._vals

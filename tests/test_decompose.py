@@ -39,6 +39,17 @@ def test_enumeration_complete_and_counts():
     assert len(list(enumerate_factorizations(48, 3))) == 45
 
 
+@settings(max_examples=100, deadline=None)
+@given(d=st.integers(1, 512), k=st.integers(1, 4))
+def test_count_matches_enumeration_property(d, k):
+    """Closed form prod_j C(a_j + k - 1, k - 1) == the enumerator's output,
+    with no duplicates and every tuple multiplying back to d."""
+    facts = list(enumerate_factorizations(d, k))
+    assert count_factorizations(d, k) == len(facts)
+    assert len(set(facts)) == len(facts)
+    assert all(math.prod(f) == d for f in facts)
+
+
 def test_paper_sec41_example():
     """6 procs, iteration (12,18): optimal grid (2,3), greedy picks (3,2)."""
     assert optimal_factorization(6, (12, 18)) == (2, 3)

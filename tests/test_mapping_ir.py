@@ -1,0 +1,326 @@
+"""Tests for the mapping IR: recorded op programs + vectorized evaluation.
+
+Covers the batched-evaluation contract of docs/mapping_ir.md: scalar
+``to_root`` and batched ``to_root_batch`` agree over random op chains, the
+vectorized ``assignment_grid`` is bit-identical to the per-point
+interpreter for every mapper in the library and the app registry, and
+data-dependent bodies fall back automatically.
+"""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import apps
+from repro.core import GPU, Machine
+from repro.core.mapper import (
+    Mapper,
+    block_mapper,
+    cyclic_mapper,
+    linearize_cyclic_mapper,
+)
+from repro.core.pspace import Decompose, Merge, ProcSpace, Split, Swap
+from repro.core.translate import declared_operands, owned_tiles, to_spmd
+from repro.core.tuples import Tup
+from repro.core import dsl
+
+
+def all_indices(shape):
+    return itertools.product(*(range(s) for s in shape))
+
+
+# ------------------------------------------------------------- IR recording
+def test_ops_are_recorded():
+    m = Machine(GPU, shape=(8, 4))
+    m2 = m.merge(0, 1).split(0, 4).swap(0, 1)
+    assert m2.ops == (Merge(0, 1, 8), Split(0, 4), Swap(0, 1))
+    assert m.ops == ()      # primitives never mutate the parent space
+
+
+def test_decompose_records_single_op():
+    m = Machine(GPU, shape=(16, 4))
+    md = m.decompose_with(0, (4, 2, 2))
+    assert md.ops == (Decompose(0, (4, 2, 2)),)
+    assert md.shape == (4, 2, 2, 4)
+
+
+def test_describe_round_trips_through_ir():
+    m = Machine(GPU, shape=(12, 7))
+    chain = m.split(0, 3).merge(1, 2).swap(0, 1).slice(0, 1, 4)
+    assert chain.describe() == (
+        "root(12, 7).split(0, 3).merge(1, 2).swap(0, 1).slice(0, 1, 4)"
+    )
+    rebuilt = ProcSpace.from_ir(chain.to_ir())
+    assert rebuilt.shape == chain.shape
+    for idx in all_indices(chain.shape):
+        assert rebuilt.to_root(idx) == chain.to_root(idx)
+
+
+def test_from_ir_rejects_unknown_op():
+    with pytest.raises(ValueError):
+        ProcSpace.from_ir({"root_shape": [4], "ops": [["frobnicate", 0]]})
+
+
+# ------------------------------------------------- scalar/batch equivalence
+def _random_chain(m, data):
+    space = m
+    n_ops = data.draw(st.integers(0, 5))
+    for _ in range(n_ops):
+        op = data.draw(st.sampled_from(
+            ["split", "merge", "swap", "slice", "decompose"]))
+        nd = space.ndim
+        if op == "split":
+            i = data.draw(st.integers(0, nd - 1))
+            divs = [d for d in range(1, space.shape[i] + 1)
+                    if space.shape[i] % d == 0]
+            space = space.split(i, data.draw(st.sampled_from(divs)))
+        elif op == "merge" and nd >= 2:
+            p = data.draw(st.integers(0, nd - 2))
+            q = data.draw(st.integers(p + 1, nd - 1))
+            space = space.merge(p, q)
+        elif op == "swap" and nd >= 2:
+            p = data.draw(st.integers(0, nd - 1))
+            q = data.draw(st.integers(0, nd - 1))
+            if p != q:
+                space = space.swap(p, q)
+        elif op == "slice":
+            i = data.draw(st.integers(0, nd - 1))
+            low = data.draw(st.integers(0, space.shape[i] - 1))
+            high = data.draw(st.integers(low + 1, space.shape[i]))
+            space = space.slice(i, low, high)
+        elif op == "decompose":
+            i = data.draw(st.integers(0, nd - 1))
+            space = space.decompose(i, (4, 4))
+    return space
+
+
+shapes = st.lists(st.integers(1, 6), min_size=1, max_size=4).map(tuple)
+
+
+@settings(max_examples=100, deadline=None)
+@given(shape=shapes, data=st.data())
+def test_to_root_batch_equals_scalar_over_random_chains(shape, data):
+    """The batched-evaluation contract: pure NumPy op replay == per-point."""
+    space = _random_chain(Machine(GPU, shape=shape), data)
+    points = list(all_indices(space.shape))
+    batch = np.asarray(points, dtype=np.int64).reshape(len(points), space.ndim)
+    roots = space.to_root_batch(batch)
+    for pt, root in zip(points, roots):
+        assert tuple(int(r) for r in root) == space.to_root(pt)
+
+
+def test_to_root_batch_validates():
+    m = Machine(GPU, shape=(2, 4))
+    with pytest.raises(IndexError):
+        m.to_root_batch(np.array([[0, 0, 0]]))          # wrong rank
+    with pytest.raises(IndexError):
+        m.to_root_batch(np.array([[0, 4]]))             # out of bounds
+
+
+# ------------------------------------------------------------- batched Tup
+def test_tup_batched_arithmetic_matches_scalar():
+    ispace = (6, 4)
+    batched = Tup.grid(ispace)
+    assert batched.is_batched and batched.batch_size == 24
+    expr = batched * (2, 2) / ispace % (3, 3)
+    for b, pt in enumerate(all_indices(ispace)):
+        scalar = Tup(pt) * (2, 2) / ispace % (3, 3)
+        assert tuple(int(v[b]) for v in expr) == tuple(scalar)
+    lin = batched.linearize(ispace)
+    assert [int(x) for x in lin] == list(range(24))
+
+
+def test_scalar_tup_unchanged():
+    a = Tup((7, 9))
+    assert not a.is_batched and a.batch_size is None
+    assert tuple(a / (2, 3)) == (3, 3)
+    assert hash(a) == hash(Tup((7, 9)))
+
+
+# --------------------------------------------------- vectorized grid + cache
+def test_vectorized_grid_bit_identical_for_library_mappers():
+    m = Machine(GPU, shape=(2, 4))
+    for mk in (block_mapper, cyclic_mapper, linearize_cyclic_mapper):
+        mapper = mk(m)
+        batched = mapper.assignment_grid((8, 8), use_cache=False)
+        # the vectorized path must actually run, not silently fall back
+        assert mapper.last_eval_path == "vectorized", mk.__name__
+        np.testing.assert_array_equal(
+            batched,
+            mapper.assignment_grid((8, 8), vectorized=False, use_cache=False),
+        )
+        assert mapper.last_eval_path == "per-point"
+
+
+@pytest.mark.parametrize("app", list(apps.iter_apps()),
+                         ids=[a.name for a in apps.iter_apps()])
+def test_registry_apps_bit_identical_scalar_vs_batched(app):
+    """Acceptance: every app's device permutation identical on both paths."""
+    n = app.default_procs
+    grid = app.tile_grid(n)
+    mapper = app.mapper(n)
+    batched = mapper.assignment_grid(grid, use_cache=False)
+    assert mapper.last_eval_path == "vectorized", app.name
+    scalar = mapper.assignment_grid(grid, vectorized=False, use_cache=False)
+    np.testing.assert_array_equal(batched, scalar)
+
+
+def test_data_dependent_body_falls_back_to_per_point():
+    """A body branching on ipoint cannot broadcast; fallback must kick in."""
+    m = Machine(GPU, shape=(4, 1))
+
+    def fn(ipoint, ispace):
+        if ipoint[0] >= 2:              # truth value of an array -> fallback
+            return m[(3, 0)]
+        return m[(ipoint[0], 0)]
+
+    mapper = Mapper("data_dep", fn)
+    grid = mapper.assignment_grid((4,))
+    assert grid.tolist() == [0, 1, 3, 3]
+    assert mapper.last_eval_path == "per-point"
+
+
+def test_constant_body_broadcasts():
+    m = Machine(GPU, shape=(2, 2))
+    mapper = Mapper("const", lambda ipoint, ispace: m[(1, 1)])
+    assert mapper.assignment_grid((3, 3)).tolist() == [[3] * 3] * 3
+
+
+def test_grid_cache_shared_across_analyses():
+    m = Machine(GPU, shape=(2, 2))
+    calls = []
+    inner = block_mapper(m).fn
+
+    def counting_fn(ipoint, ispace):
+        calls.append(1)
+        return inner(ipoint, ispace)
+
+    mapper = Mapper("counted", counting_fn)
+    assert mapper.is_bijective_on((2, 2), 4)
+    n_after_first = len(calls)
+    perm = mapper.tile_permutation((2, 2), 4)       # must reuse the cache
+    grid = mapper.assignment_grid((2, 2))
+    assert len(calls) == n_after_first
+    assert sorted(perm) == [0, 1, 2, 3]
+    assert grid.flags.writeable is False
+
+
+def test_per_point_path_never_served_from_cache():
+    """vectorized=False must recompute, even when a vectorized result for
+    the same ispace is already cached — otherwise scalar-vs-batch
+    equivalence checks would compare the cached grid with itself."""
+    mapper = block_mapper(Machine(GPU, shape=(2, 2)))
+    cached = mapper.assignment_grid((4, 4))         # populates the cache
+    assert mapper.last_eval_path == "vectorized"
+    scalar = mapper.assignment_grid((4, 4), vectorized=False)
+    assert scalar is not cached
+    assert mapper.last_eval_path == "per-point"
+    np.testing.assert_array_equal(scalar, cached)
+    # and the per-point result must not have poisoned the cache
+    assert mapper.assignment_grid((4, 4)) is cached
+
+
+# ------------------------------------------------- linearize_cyclic ranks
+def test_linearize_cyclic_rank2():
+    m = Machine(GPU, shape=(2, 2))
+    mapper = linearize_cyclic_mapper(m)
+    # column-major linearization: (i0, i1) -> i0 + 4*i1 over a (4, 3) grid
+    for i0, i1 in all_indices((4, 3)):
+        lin = i0 + 4 * i1
+        assert mapper((i0, i1), (4, 3)).flat == (lin % 2) * 2 + (lin // 2) % 2
+
+
+def test_linearize_cyclic_rank3():
+    m = Machine(GPU, shape=(2, 4))
+    mapper = linearize_cyclic_mapper(m)
+    for pt in all_indices((2, 3, 2)):
+        lin = pt[0] + 2 * pt[1] + 6 * pt[2]
+        expect = m[(lin % 2, (lin // 2) % 4)].flat
+        assert mapper(pt, (2, 3, 2)).flat == expect
+    assert mapper.is_bijective_on((2, 2, 2), 8)
+
+
+def test_linearize_cyclic_rank_mismatch_rejected():
+    mapper = linearize_cyclic_mapper(Machine(GPU, shape=(2, 2)))
+    with pytest.raises(ValueError):
+        mapper((0, 0, 0), (4, 4))       # point rank 3, space rank 2
+
+
+# ----------------------------------------------------- translate integration
+CANNON_LIKE = """\
+m = Machine(GPU)
+m1 = m.merge(0, 1)
+
+def mymap(Tuple ipoint, Tuple ispace):
+    idx = ipoint * m1.size / ispace
+    return m1[*idx]
+
+IndexTaskMap mytask mymap
+Region mytask arg0 GPU FBMEM
+Layout mytask arg1 GPU C_order
+GarbageCollect mytask acc
+Region mytask out0 GPU FBMEM
+"""
+
+
+def test_to_spmd_derives_operand_names_from_directives():
+    prog = dsl.parse(
+        CANNON_LIKE,
+        machine_factory=lambda *a, **k: Machine(GPU, shape=(2, 2)),
+    )
+    assert declared_operands(prog, "mytask") == ("acc", "arg0", "arg1", "out0")
+    plan = to_spmd(prog, "mytask", (4,), ("x",), devices=[])
+    assert set(plan.in_specs) == {"acc", "arg0", "arg1"}
+    assert set(plan.out_specs) == {"out0"}
+    assert "root(2, 2).merge(0, 1)" in plan.meta["mapper_ir"]
+
+
+def test_output_operand_convention_is_exact_match():
+    """Only `out`/`out<digits>` are outputs; an input named `output_mask`
+    must stay an input (not be silently dropped from in_specs)."""
+    from repro.core.translate import is_output_operand
+
+    assert is_output_operand("out") and is_output_operand("out3")
+    assert not is_output_operand("output_mask")
+    assert not is_output_operand("outer")
+    prog = dsl.parse(
+        "m = Machine(GPU)\n"
+        "m1 = m.merge(0, 1)\n"
+        "def mymap(Tuple ipoint, Tuple ispace):\n"
+        "    idx = ipoint * m1.size / ispace\n"
+        "    return m1[*idx]\n"
+        "IndexTaskMap mytask mymap\n"
+        "Region mytask output_mask GPU FBMEM\n",
+        machine_factory=lambda *a, **k: Machine(GPU, shape=(2, 2)),
+    )
+    plan = to_spmd(prog, "mytask", (4,), ("x",), devices=[])
+    assert set(plan.in_specs) == {"output_mask"}
+    assert set(plan.out_specs) == {"out"}
+
+
+def test_to_spmd_falls_back_without_directives():
+    prog = dsl.parse(
+        "m = Machine(GPU)\n"
+        "m1 = m.merge(0, 1)\n"
+        "def mymap(Tuple ipoint, Tuple ispace):\n"
+        "    idx = ipoint * m1.size / ispace\n"
+        "    return m1[*idx]\n"
+        "IndexTaskMap mytask mymap\n",
+        machine_factory=lambda *a, **k: Machine(GPU, shape=(2, 2)),
+    )
+    plan = to_spmd(prog, "mytask", (4,), ("x",), devices=[])
+    assert set(plan.in_specs) == {"arg0", "arg1"}
+    assert set(plan.out_specs) == {"out"}
+
+
+def test_owned_tiles_vectorized_grouping():
+    m = Machine(GPU, shape=(2, 2))
+    mapper = cyclic_mapper(m)
+    owned = owned_tiles(mapper, (4, 4), 4)
+    assert sorted(owned) == [0, 1, 2, 3]
+    assert all(len(v) == 4 for v in owned.values())
+    # row-major order within a device's tile list is preserved
+    assert owned[0] == [(0, 0), (0, 2), (2, 0), (2, 2)]
+    flat = {pt for pts in owned.values() for pt in pts}
+    assert len(flat) == 16
