@@ -12,18 +12,15 @@ geomean 16% on hardware).
 The sweep runs once per halo-pattern application in the unified registry
 (stencil, PENNANT), using each app's per-point flops and exchanged-field
 count, so new halo workloads join the sweep by registering themselves.
+Run with ``PYTHONPATH=src``.
 """
 from __future__ import annotations
 
 import math
-import sys
-from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
-
-from repro import apps  # noqa: E402
-from repro.core.commvolume import halo_surface_volume  # noqa: E402
-from repro.core.decompose import (  # noqa: E402
+from repro import apps
+from repro.core.commvolume import halo_surface_volume
+from repro.core.decompose import (
     greedy_factorization,
     optimal_factorization,
 )

@@ -5,19 +5,15 @@ Mapple program LoC (the paper's non-blank, non-comment convention, via
 ``MapperProgram.loc()``) is compared against its hand-written raw-JAX
 baseline fixture in ``benchmarks/lowlevel/*_raw.py``, and the two are
 verified to express the SAME mapping by comparing device-assignment grids
-at the fixture's machine scale.
+at the fixture's machine scale. Run with ``PYTHONPATH=src``.
 """
 from __future__ import annotations
 
 import importlib.util
-import sys
-from pathlib import Path
 
 import numpy as np
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
-
-from repro import apps  # noqa: E402
+from repro import apps
 
 
 def load_raw(app: "apps.Application"):

@@ -25,10 +25,8 @@ from pathlib import Path
 
 import numpy as np
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
-
-from repro import apps  # noqa: E402
-from repro.core import (  # noqa: E402
+from repro import apps
+from repro.core import (
     GPU,
     Machine,
     block_cyclic_mapper,

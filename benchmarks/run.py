@@ -2,20 +2,19 @@
 
   PYTHONPATH=src python -m benchmarks.run           # everything
   PYTHONPATH=src python -m benchmarks.run --only loc_table
+  PYTHONPATH=src python -m benchmarks.run --only mapper_tuning  # + BENCH_tuning.json
 
 Prints a ``name,us_per_call,derived`` CSV at the end (microbench section)
-plus the per-table reports above it.
+plus the per-table reports above it. The ``mapper_tuning`` lane writes
+``BENCH_tuning.json`` (uploaded as a CI artifact next to
+``BENCH_mapping.json``).
 """
 from __future__ import annotations
 
 import argparse
-import sys
 import time
-from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
-
-from benchmarks import (  # noqa: E402
+from benchmarks import (
     decompose_sweep,
     heuristic_gap,
     loc_table,
@@ -26,9 +25,10 @@ from benchmarks import (  # noqa: E402
 
 SECTIONS = {
     "loc_table": ("Table 1: mapper LoC, Mapple vs low-level", loc_table.run),
-    "mapper_tuning": ("Table 2: mapper tuning headroom", mapper_tuning.run),
-    "heuristic_gap": ("Fig 13: algorithm-specified vs runtime heuristics",
-                      heuristic_gap.run),
+    "mapper_tuning": ("Table 2: mapper tuning headroom (autotuner search)",
+                      mapper_tuning.run),
+    "heuristic_gap": ("Heuristic gap: greedy baseline vs tuner optimum "
+                      "(+ Fig 13 locality)", heuristic_gap.run),
     "decompose_sweep": ("Figs 14-17: decompose vs Algorithm 1 (180 configs)",
                         decompose_sweep.run),
     "mapping_eval": ("Mapping IR: vectorized vs per-point grid evaluation",

@@ -19,6 +19,9 @@ from __future__ import annotations
 import math
 
 from repro.core.commvolume import (
+    GatherScatterCostModel,
+    HaloCostModel,
+    MatmulCostModel,
     MatmulProblem,
     cannon_volume,
     cosma_grid,
@@ -28,7 +31,11 @@ from repro.core.commvolume import (
     solomonik_volume,
     summa_volume,
 )
-from repro.core.decompose import greedy_factorization, optimal_factorization
+from repro.core.decompose import (
+    cached_optimal,
+    greedy_factorization,
+    optimal_factorization,
+)
 from repro.apps.registry import (
     MATMUL,
     SCIENCE,
@@ -39,6 +46,7 @@ from repro.apps.registry import (
     square_grid,
     two_level_machine,
 )
+from repro.search.space import SearchSpace
 
 # Default problem sizes (scaled-down analogues of the paper's runs).
 MATMUL_PROBLEM = MatmulProblem(4096, 4096, 4096)
@@ -60,8 +68,14 @@ def _science_machine(procs: int) -> tuple[int, int]:
 
 
 def _stencil_grid(lengths):
+    lengths = tuple(int(x) for x in lengths)
+
     def grid(procs: int) -> tuple[int, ...]:
-        return tuple(int(x) for x in optimal_factorization(procs, lengths))
+        # Memoized hot path: the runner / tuner re-derive this grid often.
+        # Integrality-constrained like the science/ launchers, so the
+        # analysis grid always matches the grid the kernels execute on.
+        return tuple(int(x) for x in cached_optimal(
+            procs, lengths, require_divisible=True))
 
     return grid
 
@@ -278,6 +292,112 @@ def _circuit_tuning(procs: int) -> tuple[float, float]:
     return (v, 0.75 * v)
 
 
+# ------------------------------------------------------------- search spaces
+# Candidate axes + cost objective per app for the mapper autotuner
+# (repro.search). The legacy ``tuning`` pairs above stay as regression
+# oracles the tuner must rediscover; the search space is what it actually
+# explores: grid factorizations (validity-filtered), block/cyclic
+# distribution choices and transform orderings over the machine hierarchy,
+# plus app-specific option axes (circuit's memory placement).
+
+
+def _render_directives(*lines: str):
+    def render(task: str, opts: dict[str, str]) -> str:
+        return "".join(ln.format(task=task, **opts) + "\n" for ln in lines)
+
+    return render
+
+
+def _square_ok(grid: tuple[int, ...]) -> bool:
+    return grid[0] == grid[1]
+
+
+def _replicated_ok(grid: tuple[int, ...]) -> bool:
+    q1, q2, c = grid
+    return q1 == q2 and 1 <= c <= q1 and q1 % c == 0
+
+
+def _solomonik_default_grid(procs: int) -> tuple[int, int, int]:
+    q = math.isqrt(procs)
+    if q * q == procs:
+        return (q, q, 1)
+    return replicated_grid(procs)
+
+
+def _matmul_space(algorithm: str, *, rank: int, grid_ok=None, default_grid=None,
+                  directives=None) -> SearchSpace:
+    # directives=None: the renderer's standard Region/Backpressure fallback
+    # (repro.search.space.standard_directives) applies.
+    return SearchSpace(
+        rank=rank,
+        cost_model=lambda procs, opts: MatmulCostModel(MATMUL_PROBLEM, algorithm),
+        grid_ok=grid_ok,
+        default_grid=default_grid,
+        directives=directives,
+    )
+
+
+CANNON_SPACE = _matmul_space(
+    "cannon", rank=2, grid_ok=_square_ok, default_grid=square_grid,
+    directives=_render_directives(
+        "Region {task} arg0 GPU FBMEM",
+        "Region {task} arg1 GPU FBMEM",
+        "GarbageCollect {task} arg2",
+        "Backpressure {task} 1",
+    ),
+)
+SUMMA_SPACE = _matmul_space(
+    "summa", rank=2, default_grid=square_grid,
+    directives=_render_directives(
+        "Region {task} arg0 GPU FBMEM",
+        "Region {task} arg1 GPU FBMEM",
+        "Backpressure {task} 2",
+    ),
+)
+PUMMA_SPACE = _matmul_space("pumma", rank=2, default_grid=square_grid)
+JOHNSON_SPACE = _matmul_space("johnson", rank=3, default_grid=cube_grid)
+SOLOMONIK_SPACE = _matmul_space(
+    "solomonik", rank=3, grid_ok=_replicated_ok,
+    default_grid=_solomonik_default_grid,
+    directives=_render_directives(
+        "Region {task} arg0 GPU FBMEM",
+        "GarbageCollect {task} arg2",
+        "Backpressure {task} 1",
+    ),
+)
+COSMA_SPACE = _matmul_space(
+    "cosma", rank=3, default_grid=lambda p: tuple(greedy_factorization(p, 3)),
+)
+
+CIRCUIT_SPACE = SearchSpace(
+    rank=1,
+    cost_model=lambda procs, opts: GatherScatterCostModel(
+        CIRCUIT_NODES_PER_PIECE,
+        discount=0.75 if opts.get("arg1") == "ZCMEM" else 1.0,
+    ),
+    option_axes=(("arg1", ("ZCMEM", "FBMEM")),),
+    default_grid=lambda p: (p,),
+    default_options=(("arg1", "FBMEM"),),
+    directives=_render_directives(
+        "Region {task} arg0 GPU FBMEM",
+        "Region {task} arg1 CPU {arg1}",
+        "Backpressure {task} 2",
+    ),
+)
+
+
+def _halo_space(lengths: tuple[int, ...], fields: int) -> SearchSpace:
+    return SearchSpace(
+        rank=len(lengths),
+        cost_model=lambda procs, opts: HaloCostModel(lengths, fields=fields),
+        default_grid=lambda p: greedy_factorization(p, len(lengths)),
+    )
+
+
+STENCIL_SPACE = _halo_space(STENCIL_LENGTHS, 1)
+PENNANT_SPACE = _halo_space(PENNANT_ZONES, PENNANT_FIELDS)
+
+
 # -------------------------------------------------------------- registration
 register(Application(
     name="cannon",
@@ -292,6 +412,7 @@ register(Application(
     comm_volume=lambda p: cannon_volume(MATMUL_PROBLEM, square_grid(p)),
     step_flops=lambda p: MATMUL_PROBLEM.flops,
     tuning=_cannon_tuning,
+    search_space=CANNON_SPACE,
     lowlevel_fixture="benchmarks/lowlevel/cannon_raw.py",
     validate="matmul",
     meta={"problem": MATMUL_PROBLEM},
@@ -310,6 +431,7 @@ register(Application(
     comm_volume=lambda p: summa_volume(MATMUL_PROBLEM, square_grid(p)),
     step_flops=lambda p: MATMUL_PROBLEM.flops,
     tuning=_summa_tuning,
+    search_space=SUMMA_SPACE,
     lowlevel_fixture="benchmarks/lowlevel/summa_raw.py",
     validate="matmul",
     meta={"problem": MATMUL_PROBLEM},
@@ -328,6 +450,7 @@ register(Application(
     comm_volume=lambda p: summa_volume(MATMUL_PROBLEM, square_grid(p)),
     step_flops=lambda p: MATMUL_PROBLEM.flops,
     tuning=_pumma_tuning,
+    search_space=PUMMA_SPACE,
     lowlevel_fixture="benchmarks/lowlevel/pumma_raw.py",
     validate="matmul",
     meta={"problem": MATMUL_PROBLEM},
@@ -346,6 +469,7 @@ register(Application(
     comm_volume=lambda p: johnson_volume(MATMUL_PROBLEM, cube_grid(p)),
     step_flops=lambda p: MATMUL_PROBLEM.flops,
     tuning=_johnson_tuning,
+    search_space=JOHNSON_SPACE,
     lowlevel_fixture="benchmarks/lowlevel/johnson_raw.py",
     validate="matmul",
     meta={"problem": MATMUL_PROBLEM},
@@ -364,6 +488,7 @@ register(Application(
     comm_volume=lambda p: solomonik_volume(MATMUL_PROBLEM, replicated_grid(p)),
     step_flops=lambda p: MATMUL_PROBLEM.flops,
     tuning=_solomonik_tuning,
+    search_space=SOLOMONIK_SPACE,
     lowlevel_fixture="benchmarks/lowlevel/solomonik_raw.py",
     validate="matmul",
     meta={"problem": MATMUL_PROBLEM},
@@ -382,6 +507,7 @@ register(Application(
     comm_volume=lambda p: cosma_volume(MATMUL_PROBLEM, p),
     step_flops=lambda p: MATMUL_PROBLEM.flops,
     tuning=_cosma_tuning,
+    search_space=COSMA_SPACE,
     lowlevel_fixture="benchmarks/lowlevel/cosma_raw.py",
     validate="matmul",
     meta={"problem": MATMUL_PROBLEM},
@@ -400,6 +526,7 @@ register(Application(
     comm_volume=_circuit_volume,
     step_flops=lambda p: 12.0 * CIRCUIT_WIRES_PER_PIECE * p,
     tuning=_circuit_tuning,
+    search_space=CIRCUIT_SPACE,
     lowlevel_fixture="benchmarks/lowlevel/circuit_raw.py",
     validate="circuit",
     meta={"nodes_per_piece": CIRCUIT_NODES_PER_PIECE},
@@ -418,6 +545,7 @@ register(Application(
     comm_volume=_halo_volume(STENCIL_LENGTHS, 1),
     step_flops=lambda p: 5.0 * STENCIL_LENGTHS[0] * STENCIL_LENGTHS[1],
     tuning=_halo_tuning(STENCIL_LENGTHS, 1),
+    search_space=STENCIL_SPACE,
     lowlevel_fixture="benchmarks/lowlevel/stencil_raw.py",
     validate="stencil",
     meta={"lengths": STENCIL_LENGTHS, "flops_per_point": 5.0,
@@ -437,6 +565,7 @@ register(Application(
     comm_volume=_halo_volume(PENNANT_ZONES, PENNANT_FIELDS),
     step_flops=lambda p: 20.0 * PENNANT_ZONES[0] * PENNANT_ZONES[1],
     tuning=_halo_tuning(PENNANT_ZONES, PENNANT_FIELDS),
+    search_space=PENNANT_SPACE,
     lowlevel_fixture="benchmarks/lowlevel/pennant_raw.py",
     validate="pennant",
     meta={"lengths": PENNANT_ZONES, "flops_per_point": 20.0,

@@ -32,6 +32,7 @@ from repro.core.machine import GPU, Machine
 from repro.core.mapper import Mapper
 from repro.core.pspace import ProcSpace
 from repro.core.translate import MappingPlan, to_spmd
+from repro.search.space import SearchSpace
 
 REPO_ROOT = Path(__file__).resolve().parents[3]
 
@@ -60,8 +61,12 @@ class Application:
     mapple_template: Callable[[int], str]       # procs -> Mapple source
     comm_volume: Callable[[int], float]         # elements moved per step
     step_flops: Callable[[int], float]          # modeled compute per step
-    # (default-mapper volume, tuned-mapper volume) — the Table 2 experiment
+    # (default-mapper volume, tuned-mapper volume) — the Table 2 pair, kept
+    # as a REGRESSION ORACLE: the autotuner must rediscover (or beat) the
+    # tuned volume; tests assert it, nothing trusts it as ground truth.
     tuning: Callable[[int], tuple[float, float]] | None = None
+    # Candidate axes + cost model for the mapper autotuner (repro.search).
+    search_space: SearchSpace | None = None
     lowlevel_fixture: str = ""                  # repo-relative baseline path
     validate: str | None = None                 # hook in repro.apps.validate
     meta: dict = dataclasses.field(default_factory=dict)

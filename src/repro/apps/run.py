@@ -9,10 +9,17 @@ Runs every selected app through the full pipeline —
     PYTHONPATH=src python -m repro.apps.run --app summa --procs 64
     PYTHONPATH=src python -m repro.apps.run --all
     PYTHONPATH=src python -m repro.apps.run --all --execute   # + numerics
+    PYTHONPATH=src python -m repro.apps.run --all --tune      # autotuner
 
 ``--execute`` additionally runs each app's distributed kernel on fake CPU
 devices and checks it against its single-device reference (the flag must
 set XLA_FLAGS before JAX initializes, so use it from a fresh process).
+
+``--tune`` runs the mapper autotuner (``repro.search``) over each selected
+app's declared search space: candidates are scored with the app's cost
+model, beam-pruned, evaluated through the vectorized batch path, and the
+winning Mapple program + candidate leaderboard are printed. The legacy
+hand-tuned volume pair is checked as a regression oracle.
 """
 from __future__ import annotations
 
@@ -57,6 +64,48 @@ def analyze(app, procs: int | None) -> dict:
     }
 
 
+def tune(selection, procs: int | None, report=print) -> int:
+    """Run the autotuner over the selected apps; nonzero on any failure."""
+    import time
+
+    from repro.search.tuner import report_lines, tune_app
+
+    failures = []
+    tuned = 0
+    t0 = time.perf_counter()
+    for app in selection:
+        if app.search_space is None:
+            report(f"[{app.name}] no search space declared; skipping")
+            continue
+        rep = tune_app(app, procs)
+        tuned += 1
+        for line in report_lines(rep):
+            report(line)
+        report("")
+        if not rep.verified:
+            failures.append(f"{app.name}: rendered DSL diverged from the IR")
+        if not rep.oracle_ok:
+            if rep.best.volume > rep.oracle[1] * (1 + 1e-9):
+                failures.append(
+                    f"{app.name}: tuner failed to rediscover the hand-tuned "
+                    f"volume (best {rep.best.volume:.6g} vs oracle "
+                    f"{rep.oracle[1]:.6g})"
+                )
+            else:
+                failures.append(
+                    f"{app.name}: default candidate volume "
+                    f"{rep.default.volume:.6g} disagrees with the oracle "
+                    f"default {rep.oracle[0]:.6g}"
+                )
+    report(f"tuned {tuned} of {len(selection)} app(s) in "
+           f"{time.perf_counter() - t0:.2f}s")
+    if failures:
+        for f in failures:
+            print(f"ERROR: {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
 def report_table(rows, report=print) -> None:
     report(
         f"{'app':10s} {'procs':>5s} {'grid':>12s} {'mapple':>7s} "
@@ -99,12 +148,18 @@ def main(argv=None) -> int:
     ap.add_argument("--show-ir", action="store_true",
                     help="print each mapper's recorded transformation IR "
                          "(the inspectable ProcSpace op programs)")
+    ap.add_argument("--tune", action="store_true",
+                    help="run the mapper autotuner over each app's search "
+                         "space and print the winning program + leaderboard")
     ap.add_argument("--list", action="store_true",
                     help="list registered applications")
     args = ap.parse_args(argv)
 
     if args.procs is not None and args.procs < 1:
         ap.error(f"--procs must be >= 1, got {args.procs}")
+    if args.tune and (args.execute or args.show_ir):
+        ap.error("--tune is a separate mode; run it without "
+                 "--execute/--show-ir")
 
     if args.execute:
         # Must happen before JAX initializes its backends. Append to any
@@ -135,6 +190,9 @@ def main(argv=None) -> int:
         selection = list(apps.iter_apps())
     else:
         ap.error("pass --app NAME, --all, or --list")
+
+    if args.tune:
+        return tune(selection, args.procs)
 
     rows = [analyze(app, args.procs) for app in selection]
     report_table(rows)

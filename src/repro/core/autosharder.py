@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.commvolume import LMCommModel
+from repro.core.commvolume import LMCommModel, LMStepCostModel
 from repro.core.decompose import enumerate_factorizations
 
 
@@ -84,7 +84,7 @@ def plan_mesh(
         we require ep == tp for MoE archs when use_ep (experts ride the
         model axis — one-axis EP, the deployment-standard layout).
     """
-    model = wl.comm_model()
+    objective = LMStepCostModel(wl.comm_model())
     moe = wl.n_experts > 0 if use_ep is None else use_ep
     k = 2
     best: tuple[float, tuple[int, ...]] | None = None
@@ -99,7 +99,7 @@ def plan_mesh(
         if tp > 1 and (wl.n_heads % tp != 0 or wl.d_model % tp != 0):
             continue
         ep = tp if (moe and wl.n_experts % tp == 0) else 1
-        cost = model.step_volume(dp, tp, ep)
+        cost = objective((dp, tp, ep))
         key = (cost, f)
         if best is None or key < best:
             best = key
@@ -113,14 +113,14 @@ def plan_mesh(
 
 def plan_report(n_chips: int, wl: LMWorkload) -> str:
     """Human-readable planning table (used by examples/)."""
-    model = wl.comm_model()
+    objective = LMStepCostModel(wl.comm_model())
     rows = []
     for f in sorted(enumerate_factorizations(n_chips, 2)):
         dp, tp = f
         if wl.global_batch % dp or (tp > 1 and wl.n_heads % tp):
             continue
         ep = tp if wl.n_experts and wl.n_experts % tp == 0 else 1
-        rows.append((model.step_volume(dp, tp, ep), dp, tp, ep))
+        rows.append((objective((dp, tp, ep)), dp, tp, ep))
     rows.sort()
     lines = [f"{'bytes/step':>14}  {'dp':>5} {'tp':>4} {'ep':>4}"]
     for cost, dp, tp, ep in rows[:12]:

@@ -5,6 +5,13 @@ per-application volumes used by the benchmark harnesses to reproduce the
 paper's performance deltas as communication ratios, and the LM-parallelism
 cost model used by the beyond-paper auto-sharder.
 
+Every model is also packaged behind the :class:`CostModel` protocol — a
+callable from a candidate factor tuple to a scalar volume — so halo,
+transpose, the six matmul costs and the LM step model are interchangeable
+objectives: ``decompose.optimal_factorization(objective=...)``, the mapper
+autotuner (``repro.search``) and the auto-sharder all consume the same
+objects.
+
 All volumes are in *elements* unless a dtype size is applied by the caller.
 """
 from __future__ import annotations
@@ -123,10 +130,13 @@ def johnson_volume(p: MatmulProblem, grid: tuple[int, int, int]) -> float:
 def solomonik_volume(p: MatmulProblem, grid: tuple[int, int, int]) -> float:
     """Solomonik 2.5D on (q, q, c): c-fold replication; shifts shrink by c."""
     q1, q2, c = grid
+    if q1 != q2:
+        raise ValueError("Solomonik's 2.5D algorithm requires a (q, q, c) grid")
+    if c < 1:
+        raise ValueError(f"replication factor must be >= 1, got {c}")
     q = q1
     tile_a = (p.m / q) * (p.k / q)
     tile_b = (p.k / q) * (p.n / q)
-    tile_c = (p.m / q) * (p.n / q)
     rounds = max(q // c - 1, 0)
     shift = q * q * c * rounds * (tile_a + tile_b)
     # Broadcast of initial replicas + final C reduction over the c axis.
@@ -189,3 +199,142 @@ class LMCommModel:
             per_layer = 4.0 * (1.0 - 1.0 / ep) * (self.moe_tokens_bytes / dp)
             vol += per_layer * self.n_moe_layers
         return vol
+
+
+# --------------------------------------------------------- CostModel protocol
+class CostModel:
+    """An interchangeable communication objective over candidate factor tuples.
+
+    ``cost(factors)`` maps one ordered factor tuple — a processor grid for
+    the application models, a ``(dp, tp[, ep])`` parallelism split for the
+    LM model — to a modeled communication volume. Instances are callables,
+    so a CostModel drops unchanged into
+    ``decompose.optimal_factorization(objective=...)`` and
+    ``ProcSpace.decompose(objective=...)``; the mapper autotuner
+    (``repro.search``) and the auto-sharder score candidates through the
+    same interface.
+
+    Implementations raise ``ValueError`` for factor tuples the model cannot
+    use (wrong arity, Cannon's square-grid requirement, ...); enumerative
+    consumers catch it and skip the candidate.
+    """
+
+    name: str = "cost"
+
+    def cost(self, factors: Sequence[int]) -> float:
+        raise NotImplementedError
+
+    def __call__(self, factors: Sequence[int]) -> float:
+        return self.cost(factors)
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloCostModel(CostModel):
+    """Sec. 4.2 halo exchange: exact interior-surface volume (isotropic) or
+    the Sec. 7.2.1 anisotropic form when per-dim ``halo`` weights are given,
+    scaled by the number of exchanged ``fields``."""
+
+    lengths: tuple[int, ...]
+    halo: tuple[float, ...] | None = None
+    fields: int = 1
+    name = "halo"
+
+    def cost(self, factors: Sequence[int]) -> float:
+        if len(factors) != len(self.lengths):
+            raise ValueError(
+                f"grid rank {len(factors)} != iteration rank {len(self.lengths)}"
+            )
+        if self.halo is None:
+            return self.fields * halo_surface_volume(self.lengths, factors)
+        return self.fields * aniso_halo_volume(self.lengths, factors, self.halo)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransposeCostModel(CostModel):
+    """Sec. 7.2.2 mixed objective: anisotropic halo volume plus the
+    all-to-all volume of transposes along ``transpose_dims``."""
+
+    lengths: tuple[int, ...]
+    transpose_dims: tuple[int, ...]
+    halo: tuple[float, ...] | None = None
+    name = "transpose"
+
+    def cost(self, factors: Sequence[int]) -> float:
+        if len(factors) != len(self.lengths):
+            raise ValueError(
+                f"grid rank {len(factors)} != iteration rank {len(self.lengths)}"
+            )
+        h = self.halo if self.halo is not None else (1.0,) * len(self.lengths)
+        return aniso_halo_volume(self.lengths, factors, h) + transpose_volume(
+            self.lengths, factors, self.transpose_dims
+        )
+
+
+_MATMUL_VOLUMES = {
+    "cannon": cannon_volume,
+    "summa": summa_volume,
+    "pumma": pumma_volume,
+    "johnson": johnson_volume,
+    "solomonik": solomonik_volume,
+    # COSMA candidates are scored with the 3D (Johnson) volume at the
+    # candidate grid; cosma_volume() is that cost at COSMA's heuristic grid.
+    "cosma": johnson_volume,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulCostModel(CostModel):
+    """Published total communication volume of one distributed matmul
+    algorithm as a function of the candidate processor grid."""
+
+    problem: MatmulProblem
+    algorithm: str
+
+    def __post_init__(self) -> None:
+        if self.algorithm not in _MATMUL_VOLUMES:
+            raise ValueError(
+                f"unknown matmul algorithm {self.algorithm!r}; "
+                f"known: {sorted(_MATMUL_VOLUMES)}"
+            )
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return self.algorithm
+
+    def cost(self, factors: Sequence[int]) -> float:
+        return _MATMUL_VOLUMES[self.algorithm](self.problem, tuple(factors))
+
+
+@dataclasses.dataclass(frozen=True)
+class GatherScatterCostModel(CostModel):
+    """Circuit-style gather/scatter: all_gather(V) + psum_scatter(Q) ring
+    volume, with an optional discount for zero-copy (ZCMEM) placement of
+    the shared state (the paper's Table 2 circuit tuning)."""
+
+    nodes_per_piece: int
+    discount: float = 1.0
+    name = "gather_scatter"
+
+    def cost(self, factors: Sequence[int]) -> float:
+        (procs,) = factors
+        base = 2.0 * (procs - 1) * (self.nodes_per_piece * procs)
+        return self.discount * base
+
+
+@dataclasses.dataclass(frozen=True)
+class LMStepCostModel(CostModel):
+    """The auto-sharder's objective: per-step LM communication under a
+    ``(dp, tp)`` or ``(dp, tp, ep)`` factorization of the chip count."""
+
+    model: LMCommModel
+    name = "lm_step"
+
+    def cost(self, factors: Sequence[int]) -> float:
+        if len(factors) == 2:
+            dp, tp = factors
+            ep = 1
+        elif len(factors) == 3:
+            dp, tp, ep = factors
+        else:
+            raise ValueError(f"expected (dp, tp[, ep]), got {tuple(factors)}")
+        return self.model.step_volume(dp, tp, ep)

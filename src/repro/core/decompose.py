@@ -218,6 +218,15 @@ def greedy_workload_factorization(d: int, lengths: Sequence[int]) -> tuple[int, 
 
 @functools.lru_cache(maxsize=4096)
 def cached_optimal(d: int, lengths: tuple[int, ...],
-                   halo: tuple[float, ...] | None = None) -> tuple[int, ...]:
-    """Memoized entry point for hot paths (mesh planning in the launcher)."""
-    return optimal_factorization(d, lengths, halo=halo)
+                   halo: tuple[float, ...] | None = None,
+                   require_divisible: bool = False) -> tuple[int, ...]:
+    """Memoized entry point for hot paths (grid planning in the launchers).
+
+    ``require_divisible`` honors the paper's integrality constraint
+    (every d_m divides l_m) — the shard_map launchers need it because XLA
+    shards must tile the array evenly; falls back to the unconstrained
+    optimum when no divisible factorization exists.
+    """
+    return optimal_factorization(
+        d, lengths, halo=halo, require_divisible=require_divisible
+    )

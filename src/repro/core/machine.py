@@ -62,6 +62,19 @@ class MachineSpec:
         return self.dci_bw if level == 0 and len(self.shape) > 1 else self.ici_bw
 
 
+def modeled_step_time(flops_total: float, comm_elems: float, chips: int,
+                      *, elem_bytes: int = 4) -> float:
+    """Modeled step time on the v5e fabric: compute and communication
+    overlap, the shorter leg costs a 10% tax. The single time model behind
+    the Table 2 speedups (benchmarks/mapper_tuning.py) and the
+    heuristic-gap margins (benchmarks/heuristic_gap.py) — shared so the
+    two harnesses can never drift onto different fabric assumptions."""
+    link = ICI_BW_PER_LINK * ICI_LINKS_PER_CHIP
+    compute = flops_total / (chips * PEAK_FLOPS_BF16)
+    comm = comm_elems * elem_bytes / (chips * link)
+    return max(compute, comm) + 0.1 * min(compute, comm)
+
+
 # Canonical machines used across the repo.
 V5E_POD = MachineSpec(shape=(16, 16), level_names=("data", "model"))
 V5E_TWO_PODS = MachineSpec(shape=(2, 16, 16), level_names=("pod", "data", "model"))

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.decompose import optimal_factorization
+from repro.core.decompose import cached_optimal
 from repro.core.mapper import block_mapper
 from repro.core.pspace import ProcSpace
 from repro.matmul.common import MatmulGrid, build_grid
@@ -39,7 +39,8 @@ class PennantConfig:
 
 
 def grid_for(machine: ProcSpace, cfg: PennantConfig, devices=None) -> MatmulGrid:
-    g = optimal_factorization(machine.nprocs, (cfg.nzx, cfg.nzy))
+    # Memoized + integrality-constrained (shards must tile the zone arrays).
+    g = cached_optimal(machine.nprocs, (cfg.nzx, cfg.nzy), require_divisible=True)
     m1 = machine.merge(0, 1) if machine.ndim == 2 else machine
     m2 = m1.decompose_with(0, g)
     mapper = block_mapper(m2, "pennant_block")

@@ -9,15 +9,13 @@ app is the end-to-end validation of the primitive.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.decompose import greedy_factorization, optimal_factorization
-from repro.core.mapper import Mapper, block_mapper
+from repro.core.decompose import cached_optimal, greedy_factorization
+from repro.core.mapper import block_mapper
 from repro.core.pspace import ProcSpace
 from repro.matmul.common import build_grid, MatmulGrid
 from repro.core.jaxcompat import shard_map
@@ -39,7 +37,9 @@ def choose_grid(nprocs: int, cfg: StencilConfig, *, use_greedy: bool = False
     if use_greedy:
         g = greedy_factorization(nprocs, 2)
     else:
-        g = optimal_factorization(nprocs, (cfg.nx, cfg.ny))
+        # Memoized + integrality-constrained: shard_map needs every factor
+        # to divide its extent (the paper's l_m/w_m in N constraint).
+        g = cached_optimal(nprocs, (cfg.nx, cfg.ny), require_divisible=True)
     return (int(g[0]), int(g[1]))
 
 

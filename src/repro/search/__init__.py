@@ -1,0 +1,44 @@
+"""Mapper autotuner: cost-model-driven search over mapper IR programs.
+
+``repro.search.space`` enumerates candidate mapper programs (grid
+factorizations x distribution choices x transform orderings, as PR-2
+mapping IR); ``repro.search.tuner`` scores them with the unified
+:class:`~repro.core.commvolume.CostModel` objectives, prunes with a beam,
+evaluates survivors through the vectorized ``assignment_grid`` batch
+path, and reports the winning Mapple program. See docs/tuning.md.
+"""
+from repro.search.space import (
+    BLOCK_CYCLIC,
+    CYCLIC_BLOCK,
+    Candidate,
+    CandidateProgram,
+    SearchSpace,
+    build_program,
+    node_split,
+    render_source,
+)
+from repro.search.tuner import (
+    ScoredCandidate,
+    TuningReport,
+    cross_node_fraction,
+    report_lines,
+    tune_app,
+    tune_registry,
+)
+
+__all__ = [
+    "BLOCK_CYCLIC",
+    "CYCLIC_BLOCK",
+    "Candidate",
+    "CandidateProgram",
+    "SearchSpace",
+    "ScoredCandidate",
+    "TuningReport",
+    "build_program",
+    "cross_node_fraction",
+    "node_split",
+    "render_source",
+    "report_lines",
+    "tune_app",
+    "tune_registry",
+]

@@ -5,8 +5,13 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.commvolume import (
+    GatherScatterCostModel,
+    HaloCostModel,
     LMCommModel,
+    LMStepCostModel,
+    MatmulCostModel,
     MatmulProblem,
+    TransposeCostModel,
     aniso_halo_volume,
     cannon_volume,
     cosma_grid,
@@ -81,6 +86,72 @@ def test_cosma_grid_prefers_large_dims():
     assert math.prod(g) == 64
     # m and k are large; n tiny -> few cuts along n
     assert g[1] <= 2
+
+
+def test_solomonik_rejects_non_square_grids():
+    """(q1, q2, c) with q1 != q2 used to be silently collapsed onto q1."""
+    p = MatmulProblem(4096, 4096, 4096)
+    with pytest.raises(ValueError):
+        solomonik_volume(p, (8, 4, 2))
+    with pytest.raises(ValueError):
+        solomonik_volume(p, (4, 4, 0))
+    # Square grids unchanged.
+    assert solomonik_volume(p, (4, 4, 4)) > 0
+
+
+def test_cannon_rejects_non_square_grids():
+    with pytest.raises(ValueError):
+        cannon_volume(MatmulProblem(64, 64, 64), (4, 2))
+
+
+# ------------------------------------------------------- CostModel protocol
+def test_cost_models_wrap_the_closed_forms():
+    p = MatmulProblem(4096, 4096, 4096)
+    assert MatmulCostModel(p, "cannon").cost((8, 8)) == cannon_volume(p, (8, 8))
+    assert MatmulCostModel(p, "summa")((4, 16)) == summa_volume(p, (4, 16))
+    assert MatmulCostModel(p, "cosma").cost((4, 4, 4)) == \
+        johnson_volume(p, (4, 4, 4))
+    halo = HaloCostModel((1024, 8192), fields=3)
+    assert halo.cost((2, 32)) == 3 * halo_surface_volume((1024, 8192), (2, 32))
+    aniso = HaloCostModel((64, 64), halo=(2.0, 1.0))
+    assert aniso.cost((4, 4)) == aniso_halo_volume((64, 64), (4, 4), (2.0, 1.0))
+    t = TransposeCostModel((256, 256), (0,))
+    assert t.cost((4, 16)) == pytest.approx(
+        aniso_halo_volume((256, 256), (4, 16), (1.0, 1.0))
+        + transpose_volume((256, 256), (4, 16), (0,))
+    )
+    gs = GatherScatterCostModel(64, discount=0.75)
+    assert gs.cost((8,)) == 0.75 * (2.0 * 7 * 64 * 8)
+    lm = LMCommModel(param_bytes=4e9, act_bytes_per_layer=1e8, n_layers=32)
+    cm = LMStepCostModel(lm)
+    assert cm.cost((8, 4)) == lm.step_volume(8, 4)
+    assert cm.cost((8, 4, 2)) == lm.step_volume(8, 4, 2)
+
+
+def test_cost_models_raise_on_invalid_candidates():
+    p = MatmulProblem(64, 64, 64)
+    with pytest.raises(ValueError):
+        MatmulCostModel(p, "cannon").cost((4, 2))        # non-square
+    with pytest.raises(ValueError):
+        MatmulCostModel(p, "solomonik").cost((8, 4, 2))  # non-square
+    with pytest.raises(ValueError):
+        MatmulCostModel(p, "summa").cost((2, 2, 2))      # wrong arity
+    with pytest.raises(ValueError):
+        MatmulCostModel(p, "nope")
+    with pytest.raises(ValueError):
+        HaloCostModel((64, 64)).cost((2, 2, 2))
+    with pytest.raises(ValueError):
+        LMStepCostModel(LMCommModel(1e9, 1e8, 2)).cost((2, 2, 2, 2))
+
+
+def test_cost_model_is_a_decompose_objective():
+    """The same CostModel object drops into the Sec. 4.3 solver."""
+    from repro.core.decompose import optimal_factorization
+
+    model = HaloCostModel((1024, 8192))
+    best = optimal_factorization(64, (1024, 8192), objective=model)
+    assert model(best) <= model((8, 8))
+    assert best in {(2, 32), (4, 16)}  # the exact-volume tie at 64 procs
 
 
 def test_lm_comm_model_monotonicity():

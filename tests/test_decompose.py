@@ -5,6 +5,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.decompose import (
+    cached_optimal,
     count_factorizations,
     enumerate_factorizations,
     greedy_factorization,
@@ -141,3 +142,79 @@ def test_surface_volume_matches_aniso_form():
     # interior cuts: (d0-1) planes of size l1 + (d1-1) planes of size l0
     expected = (factors[0] - 1) * lengths[1] + (factors[1] - 1) * lengths[0]
     assert s == pytest.approx(expected)
+
+
+# ------------------------------------------- objective / volume agreement
+@settings(max_examples=60, deadline=None)
+@given(
+    d=st.integers(2, 96),
+    lengths=st.lists(st.integers(2, 64), min_size=2, max_size=3).map(tuple),
+    halo=st.lists(st.sampled_from([1.0, 2.0, 5.0]), min_size=3,
+                  max_size=3).map(tuple),
+    tdim=st.integers(0, 2),
+)
+def test_transpose_objective_argmin_matches_exact_volumes(d, lengths, halo,
+                                                          tdim):
+    """The argmin of transpose_objective over the enumerator must coincide
+    with the argmin of the exact aniso_halo_volume + transpose_volume sum
+    (Sec. 7.2: the objective IS those volumes, not a proxy)."""
+    k = len(lengths)
+    h = halo[:k]
+    tdims = (tdim % k,)
+    obj = transpose_objective(lengths, tdims, halo=h)
+
+    def exact(f):
+        return aniso_halo_volume(lengths, f, h) + transpose_volume(
+            lengths, f, tdims
+        )
+
+    cands = list(enumerate_factorizations(d, k))
+    by_obj = min(cands, key=lambda f: (obj(f), f))
+    by_exact = min(cands, key=lambda f: (exact(f), f))
+    # Tie-robust argmin agreement: each metric's winner must achieve the
+    # other's minimum (winners may differ only between exactly-tied grids).
+    assert exact(by_obj) == pytest.approx(exact(by_exact), rel=1e-12)
+    assert obj(by_exact) == pytest.approx(obj(by_obj), rel=1e-12)
+    assert obj(by_obj) == pytest.approx(exact(by_obj), rel=1e-9)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    d=st.sampled_from([2, 4, 8, 16, 32, 64]),
+    lengths=st.lists(st.sampled_from([64, 128, 256, 512]), min_size=2,
+                     max_size=3).map(tuple),
+)
+def test_halo_objective_ranking_matches_exact_surface(d, lengths):
+    """On divisible candidates the scale-free halo objective must rank
+    factorizations exactly as the exact interior-surface volume does
+    (they differ by a constant: sum_m prod_{n != m} l_n)."""
+    k = len(lengths)
+    divisible = [
+        f for f in enumerate_factorizations(d, k)
+        if all(length % fm == 0 for length, fm in zip(lengths, f))
+    ]
+    assert divisible  # powers of two over power-of-two extents
+    obj = halo_objective(lengths)
+    by_obj = sorted(divisible, key=lambda f: (obj(f), f))
+    by_exact = sorted(divisible, key=lambda f: (halo_surface_volume(lengths, f), f))
+    assert by_obj == by_exact
+
+
+# ----------------------------------------------------- require_divisible
+def test_require_divisible_picks_divisible_optimum():
+    """d=8 over (4,6): unconstrained optimum (2,4) does not divide the
+    extents; the integrality-constrained solver returns (4,2)."""
+    assert optimal_factorization(8, (4, 6)) == (2, 4)
+    assert optimal_factorization(8, (4, 6), require_divisible=True) == (4, 2)
+
+
+def test_cached_optimal_threads_require_divisible():
+    assert cached_optimal(8, (4, 6)) == (2, 4)
+    assert cached_optimal(8, (4, 6), require_divisible=True) == (4, 2)
+    # Falls back to the unconstrained optimum when nothing divides.
+    assert cached_optimal(8, (5, 7), require_divisible=True) == \
+        cached_optimal(8, (5, 7))
+    # Memoization: same call returns the identical tuple object.
+    a = cached_optimal(64, (1024, 8192), require_divisible=True)
+    b = cached_optimal(64, (1024, 8192), require_divisible=True)
+    assert a is b

@@ -1,0 +1,193 @@
+"""Tests for the mapper autotuner (repro.search) and its search spaces."""
+import math
+
+import numpy as np
+import pytest
+
+from repro import apps
+from repro.core import dsl
+from repro.core.decompose import enumerate_factorizations
+from repro.core.machine import GPU, Machine
+from repro.search.space import (
+    BLOCK_CYCLIC,
+    CYCLIC_BLOCK,
+    Candidate,
+    build_program,
+    node_split,
+    render_source,
+)
+from repro.search.tuner import (
+    cross_node_fraction,
+    tune_app,
+    tune_registry,
+)
+
+ALL_APPS = list(apps.iter_apps())
+APP_IDS = [a.name for a in ALL_APPS]
+
+
+# ----------------------------------------------------------- candidate space
+def test_all_nine_apps_declare_search_spaces():
+    assert all(a.search_space is not None for a in ALL_APPS)
+
+
+@pytest.mark.parametrize("app", ALL_APPS, ids=APP_IDS)
+def test_search_grids_are_valid_factorizations(app):
+    space = app.search_space
+    grids = space.grids(64)
+    assert grids
+    for g in grids:
+        assert len(g) == space.rank
+        assert math.prod(g) == 64
+
+
+def test_node_split_divides_the_grid():
+    nf = node_split((16, 4), (8, 8))
+    assert nf is not None and math.prod(nf) == 16
+    assert all(g % f == 0 for g, f in zip((8, 8), nf))
+    assert node_split((8, 1), (2, 4)) is None       # flat machine
+    assert node_split((1, 8), (2, 4)) is None
+
+
+@pytest.mark.parametrize("dist", [
+    (BLOCK_CYCLIC, BLOCK_CYCLIC),
+    (BLOCK_CYCLIC, CYCLIC_BLOCK),
+    (CYCLIC_BLOCK, BLOCK_CYCLIC),
+    (CYCLIC_BLOCK, CYCLIC_BLOCK),
+])
+@pytest.mark.parametrize("order", [(0, 1), (1, 0)])
+def test_candidate_programs_are_bijective(dist, order):
+    """Every distribution x order variant is a bijection onto the machine."""
+    cand = Candidate(grid=(4, 16), dist=dist, order=order)
+    prog = build_program((16, 4), cand, "t")
+    grid = prog.mapper.assignment_grid((4, 16), use_cache=False)
+    assert prog.mapper.last_eval_path == "vectorized"
+    assert sorted(grid.reshape(-1)) == list(range(64))
+
+
+def test_candidate_ir_records_decompose_and_swap():
+    cand = Candidate(grid=(4, 16), dist=(BLOCK_CYCLIC,) * 2, order=(1, 0))
+    prog = build_program((16, 4), cand, "t")
+    ir = prog.space.describe()
+    assert "decompose" in ir and "swap" in ir
+    # Order variants change the permutation, not the volume.
+    base = build_program(
+        (16, 4),
+        Candidate(grid=(4, 16), dist=(BLOCK_CYCLIC,) * 2, order=(0, 1)),
+        "t",
+    )
+    a = prog.mapper.assignment_grid((4, 16), use_cache=False)
+    b = base.mapper.assignment_grid((4, 16), use_cache=False)
+    assert not np.array_equal(a, b)
+    assert sorted(a.reshape(-1)) == sorted(b.reshape(-1))
+
+
+def test_rendered_source_matches_ir_program():
+    """The Mapple DSL rendering of a candidate reproduces its permutation."""
+    for cand in (
+        Candidate(grid=(4, 16), dist=(BLOCK_CYCLIC, CYCLIC_BLOCK),
+                  order=(1, 0)),
+        Candidate(grid=(2, 32), dist=(BLOCK_CYCLIC, BLOCK_CYCLIC),
+                  order=(0, 1)),
+    ):
+        prog = build_program((16, 4), cand, "t")
+        src = render_source("t", prog)
+        parsed = dsl.parse(
+            src, machine_factory=lambda *a, **k: Machine(GPU, shape=(16, 4))
+        )
+        mapper = parsed.mappers[parsed.index_task_maps["t"]]
+        np.testing.assert_array_equal(
+            mapper.assignment_grid(cand.grid, use_cache=False),
+            prog.mapper.assignment_grid(cand.grid, use_cache=False),
+        )
+
+
+def test_block_cyclic_beats_cyclic_block_on_node_locality():
+    """The Fig. 12 hierarchy (block over nodes) keeps neighbours on-node."""
+    bc = build_program(
+        (16, 4), Candidate((8, 8), (BLOCK_CYCLIC,) * 2, (0, 1)), "t"
+    )
+    cb = build_program(
+        (16, 4), Candidate((8, 8), (CYCLIC_BLOCK,) * 2, (0, 1)), "t"
+    )
+    gpus = 4
+    f_bc = cross_node_fraction(
+        bc.mapper.assignment_grid((8, 8), use_cache=False) // gpus)
+    f_cb = cross_node_fraction(
+        cb.mapper.assignment_grid((8, 8), use_cache=False) // gpus)
+    assert f_bc < f_cb
+
+
+# ------------------------------------------------------------------- tuning
+@pytest.mark.parametrize("app", ALL_APPS, ids=APP_IDS)
+def test_tuner_rediscovers_the_hand_tuned_oracle(app):
+    """The regression oracle: search must reproduce the default volume
+    exactly and achieve volume <= the hand-tuned value, at paper scale
+    and at 64 processors."""
+    for procs in (None, 64):
+        rep = tune_app(app, procs)
+        assert rep.best.bijective
+        assert rep.best.eval_path == "vectorized"
+        assert rep.verified, rep.best_source
+        assert rep.oracle is not None
+        assert rep.oracle_ok, (
+            f"{app.name}@{rep.procs}: best {rep.best.volume} vs "
+            f"oracle {rep.oracle}"
+        )
+
+
+def test_tuner_beats_or_matches_every_candidate_grid():
+    """Beam pruning cannot lose the optimum: the winner's volume equals the
+    exhaustive minimum over all valid grids."""
+    app = apps.get("stencil")
+    space = app.search_space
+    model = space.cost_model(64, {})
+    exhaustive = min(model.cost(g) for g in space.grids(64))
+    rep = tune_app(app, 64)
+    assert rep.best.volume == exhaustive
+
+
+def test_tuner_prefers_low_cross_node_variants():
+    """Among equal-volume variants the winner minimizes cross-node hops."""
+    rep = tune_app(apps.get("cannon"), 64)
+    equal_volume = [
+        s for s in rep.leaderboard if s.volume == rep.best.volume
+    ]
+    assert len(equal_volume) > 1      # dist variants really were searched
+    assert rep.best.cross_node == min(s.cross_node for s in equal_volume)
+
+
+def test_tuner_circuit_finds_zcmem_placement():
+    rep = tune_app(apps.get("circuit"), 8)
+    assert rep.best.candidate.opts["arg1"] == "ZCMEM"
+    assert "ZCMEM" in rep.best_source
+    assert rep.best.volume == pytest.approx(0.75 * apps.get("circuit").comm_volume(8))
+
+
+def test_tuner_falls_back_on_infeasible_procs():
+    rep = tune_app(apps.get("cannon"), 6)     # no square grid of 6
+    assert rep.procs == apps.get("cannon").default_procs
+    assert rep.note
+
+
+def test_tune_registry_covers_all_apps():
+    reports = tune_registry(apps.iter_apps(), 64)
+    assert {r.app for r in reports} == set(apps.names())
+    assert all(r.oracle_ok for r in reports)
+
+
+def test_searched_volume_never_above_registry_defaults():
+    """Search is a strict improvement path: for every app the tuned volume
+    is <= the app's own default-mapper volume model at 64 procs."""
+    for app in ALL_APPS:
+        rep = tune_app(app, 64)
+        if rep.default is not None:
+            assert rep.best.volume <= rep.default.volume * (1 + 1e-9)
+
+
+def test_enumerator_backs_the_grid_axis():
+    """The grid axis is the Sec. 4.3 enumerator, validity-filtered."""
+    space = apps.get("johnson").search_space
+    assert set(space.grids(64)) == set(enumerate_factorizations(64, 3))
+    cannon_space = apps.get("cannon").search_space
+    assert cannon_space.grids(64) == [(8, 8)]
