@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """§Perf hillclimb driver: hypothesis -> change -> re-lower -> record.
 
 Runs the three selected (arch x shape) cells through a sequence of named
@@ -10,10 +7,18 @@ EXPERIMENTS.md §Perf; this driver produces the numbers.
 
   PYTHONPATH=src python benchmarks/perf_iterations.py \
       --out results/perf_iterations.json
+
+``run()`` (the ``python -m benchmarks.run`` section) summarizes a
+previously recorded artifact — regenerating it relowers multi-billion
+parameter models, so the aggregate runner reads, never recomputes.
 """
 import argparse
 import json
+import os
 from pathlib import Path
+
+RESULTS_PATH = Path(__file__).resolve().parent.parent / "results" \
+    / "perf_iterations.json"
 
 
 def experiments():
@@ -63,9 +68,46 @@ def experiments():
     ]
 
 
+def run(report=print, path: Path = RESULTS_PATH) -> dict:
+    """Summarize the recorded hillclimb artifact (per-cell best step).
+
+    Raises ``FileNotFoundError`` when the artifact is absent — the
+    aggregate runner prints its standard skip line, matching the
+    roofline report's behavior for missing dry-run artifacts.
+    """
+    rows = json.loads(Path(path).read_text())
+    ok_rows = [r for r in rows if r["status"] == "ok"]
+    report(f"{'cell':45s} {'step':45s} {'dominant_s':>11s} {'bound':>10s}")
+    cells: dict[tuple, list] = {}
+    for r in ok_rows:
+        cells.setdefault(tuple(r["cell"]), []).append(r)
+    improvements = []
+    for cell, steps in cells.items():
+        dom = [max(s["compute_s"], s["memory_s"], s["collective_s"])
+               for s in steps]
+        for s, d in zip(steps, dom):
+            report(f"{'x'.join(cell):45s} {s['step'][:45]:45s} {d:11.3e} "
+                   f"{s['bottleneck']:>10s}")
+        if len(dom) > 1 and dom[-1] > 0:
+            improvements.append(dom[0] / dom[-1])
+    if improvements:
+        report(f"\n{len(cells)} cells; baseline -> final dominant-term "
+               f"speedups: "
+               + ", ".join(f"{x:.2f}x" for x in improvements))
+    return {"cells": len(cells), "rows": len(ok_rows),
+            "speedups": improvements}
+
+
 def main() -> None:
+    # Must happen before JAX initializes; append to any existing XLA_FLAGS
+    # rather than silently losing the fake-device count (or the flags).
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count=512"
+        ).strip()
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="results/perf_iterations.json")
+    ap.add_argument("--out", default=str(RESULTS_PATH))
     args = ap.parse_args()
 
     from repro.launch.dryrun import run_cell

@@ -5,9 +5,11 @@
   PYTHONPATH=src python -m benchmarks.run --only mapper_tuning  # + BENCH_tuning.json
 
 Prints a ``name,us_per_call,derived`` CSV at the end (microbench section)
-plus the per-table reports above it. The ``mapper_tuning`` lane writes
-``BENCH_tuning.json`` (uploaded as a CI artifact next to
-``BENCH_mapping.json``).
+plus the per-table reports above it. The ``mapper_tuning`` and
+``sim_eval`` lanes write ``BENCH_tuning.json`` / ``BENCH_sim.json``
+(uploaded as CI artifacts next to ``BENCH_mapping.json``); the
+``roofline`` and ``perf_iterations`` sections read previously recorded
+dry-run artifacts and skip cleanly when absent.
 """
 from __future__ import annotations
 
@@ -20,7 +22,9 @@ from benchmarks import (
     loc_table,
     mapper_tuning,
     mapping_eval,
+    perf_iterations,
     roofline_report,
+    sim_eval,
 )
 
 SECTIONS = {
@@ -33,8 +37,12 @@ SECTIONS = {
                         decompose_sweep.run),
     "mapping_eval": ("Mapping IR: vectorized vs per-point grid evaluation",
                      mapping_eval.run),
+    "sim_eval": ("Simulator: time-domain tuning vs the Table 2 volume "
+                 "oracles (+ BENCH_sim.json)", sim_eval.run),
     "roofline": ("Roofline table (from dry-run artifacts)",
                  roofline_report.run),
+    "perf_iterations": ("§Perf hillclimb summary (from recorded artifacts)",
+                        perf_iterations.run),
 }
 
 

@@ -47,6 +47,7 @@ from repro.apps.registry import (
     two_level_machine,
 )
 from repro.search.space import SearchSpace
+from repro.sim.collectives import CollectivePattern
 
 # Default problem sizes (scaled-down analogues of the paper's runs).
 MATMUL_PROBLEM = MatmulProblem(4096, 4096, 4096)
@@ -398,6 +399,32 @@ STENCIL_SPACE = _halo_space(STENCIL_LENGTHS, 1)
 PENNANT_SPACE = _halo_space(PENNANT_ZONES, PENNANT_FIELDS)
 
 
+# --------------------------------------------------------- collective patterns
+# Wire-level schedules for the simulator (repro.sim): what one step of the
+# app actually puts on the fabric, parameterized by the static problem
+# constants; everything grid-dependent is derived from the mapper's
+# assignment grid inside repro.sim.collectives.build_phases.
+_MATMUL_DIMS = {"m": MATMUL_PROBLEM.m, "n": MATMUL_PROBLEM.n,
+                "k": MATMUL_PROBLEM.k}
+SHIFT_PATTERN = CollectivePattern("shift", dict(_MATMUL_DIMS))
+PANEL_PATTERN = CollectivePattern("panel_broadcast", dict(_MATMUL_DIMS))
+BCAST3D_PATTERN = CollectivePattern("bcast_reduce_3d", dict(_MATMUL_DIMS))
+# The c replication axis (axis 2) carries the 2.5D broadcast/reduce;
+# expert placement keeps it on the intra-node fabric (local_axes).
+SHIFT25D_PATTERN = CollectivePattern(
+    "replicated_shift", {**_MATMUL_DIMS, "local_axes": (2,)},
+)
+CIRCUIT_PATTERN = CollectivePattern(
+    "gather_scatter", {"nodes_per_piece": CIRCUIT_NODES_PER_PIECE},
+)
+STENCIL_PATTERN = CollectivePattern(
+    "halo", {"lengths": STENCIL_LENGTHS, "fields": 1},
+)
+PENNANT_PATTERN = CollectivePattern(
+    "halo", {"lengths": PENNANT_ZONES, "fields": PENNANT_FIELDS},
+)
+
+
 # -------------------------------------------------------------- registration
 register(Application(
     name="cannon",
@@ -413,6 +440,7 @@ register(Application(
     step_flops=lambda p: MATMUL_PROBLEM.flops,
     tuning=_cannon_tuning,
     search_space=CANNON_SPACE,
+    collective=SHIFT_PATTERN,
     lowlevel_fixture="benchmarks/lowlevel/cannon_raw.py",
     validate="matmul",
     meta={"problem": MATMUL_PROBLEM},
@@ -432,6 +460,7 @@ register(Application(
     step_flops=lambda p: MATMUL_PROBLEM.flops,
     tuning=_summa_tuning,
     search_space=SUMMA_SPACE,
+    collective=PANEL_PATTERN,
     lowlevel_fixture="benchmarks/lowlevel/summa_raw.py",
     validate="matmul",
     meta={"problem": MATMUL_PROBLEM},
@@ -451,6 +480,7 @@ register(Application(
     step_flops=lambda p: MATMUL_PROBLEM.flops,
     tuning=_pumma_tuning,
     search_space=PUMMA_SPACE,
+    collective=PANEL_PATTERN,
     lowlevel_fixture="benchmarks/lowlevel/pumma_raw.py",
     validate="matmul",
     meta={"problem": MATMUL_PROBLEM},
@@ -470,6 +500,7 @@ register(Application(
     step_flops=lambda p: MATMUL_PROBLEM.flops,
     tuning=_johnson_tuning,
     search_space=JOHNSON_SPACE,
+    collective=BCAST3D_PATTERN,
     lowlevel_fixture="benchmarks/lowlevel/johnson_raw.py",
     validate="matmul",
     meta={"problem": MATMUL_PROBLEM},
@@ -489,6 +520,7 @@ register(Application(
     step_flops=lambda p: MATMUL_PROBLEM.flops,
     tuning=_solomonik_tuning,
     search_space=SOLOMONIK_SPACE,
+    collective=SHIFT25D_PATTERN,
     lowlevel_fixture="benchmarks/lowlevel/solomonik_raw.py",
     validate="matmul",
     meta={"problem": MATMUL_PROBLEM},
@@ -508,6 +540,7 @@ register(Application(
     step_flops=lambda p: MATMUL_PROBLEM.flops,
     tuning=_cosma_tuning,
     search_space=COSMA_SPACE,
+    collective=BCAST3D_PATTERN,
     lowlevel_fixture="benchmarks/lowlevel/cosma_raw.py",
     validate="matmul",
     meta={"problem": MATMUL_PROBLEM},
@@ -527,6 +560,7 @@ register(Application(
     step_flops=lambda p: 12.0 * CIRCUIT_WIRES_PER_PIECE * p,
     tuning=_circuit_tuning,
     search_space=CIRCUIT_SPACE,
+    collective=CIRCUIT_PATTERN,
     lowlevel_fixture="benchmarks/lowlevel/circuit_raw.py",
     validate="circuit",
     meta={"nodes_per_piece": CIRCUIT_NODES_PER_PIECE},
@@ -546,6 +580,7 @@ register(Application(
     step_flops=lambda p: 5.0 * STENCIL_LENGTHS[0] * STENCIL_LENGTHS[1],
     tuning=_halo_tuning(STENCIL_LENGTHS, 1),
     search_space=STENCIL_SPACE,
+    collective=STENCIL_PATTERN,
     lowlevel_fixture="benchmarks/lowlevel/stencil_raw.py",
     validate="stencil",
     meta={"lengths": STENCIL_LENGTHS, "flops_per_point": 5.0,
@@ -566,6 +601,7 @@ register(Application(
     step_flops=lambda p: 20.0 * PENNANT_ZONES[0] * PENNANT_ZONES[1],
     tuning=_halo_tuning(PENNANT_ZONES, PENNANT_FIELDS),
     search_space=PENNANT_SPACE,
+    collective=PENNANT_PATTERN,
     lowlevel_fixture="benchmarks/lowlevel/pennant_raw.py",
     validate="pennant",
     meta={"lengths": PENNANT_ZONES, "flops_per_point": 20.0,

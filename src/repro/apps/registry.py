@@ -33,6 +33,7 @@ from repro.core.mapper import Mapper
 from repro.core.pspace import ProcSpace
 from repro.core.translate import MappingPlan, to_spmd
 from repro.search.space import SearchSpace
+from repro.sim.collectives import CollectivePattern
 
 REPO_ROOT = Path(__file__).resolve().parents[3]
 
@@ -67,6 +68,10 @@ class Application:
     tuning: Callable[[int], tuple[float, float]] | None = None
     # Candidate axes + cost model for the mapper autotuner (repro.search).
     search_space: SearchSpace | None = None
+    # The wire-level communication pattern the app's step emits, consumed
+    # by the discrete-event simulator (repro.sim) to price a mapping in
+    # seconds against the exact tile->processor assignment.
+    collective: CollectivePattern | None = None
     lowlevel_fixture: str = ""                  # repo-relative baseline path
     validate: str | None = None                 # hook in repro.apps.validate
     meta: dict = dataclasses.field(default_factory=dict)

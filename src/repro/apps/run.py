@@ -10,6 +10,7 @@ Runs every selected app through the full pipeline —
     PYTHONPATH=src python -m repro.apps.run --all
     PYTHONPATH=src python -m repro.apps.run --all --execute   # + numerics
     PYTHONPATH=src python -m repro.apps.run --all --tune      # autotuner
+    PYTHONPATH=src python -m repro.apps.run --all --simulate  # sim timeline
 
 ``--execute`` additionally runs each app's distributed kernel on fake CPU
 devices and checks it against its single-device reference (the flag must
@@ -20,6 +21,18 @@ app's declared search space: candidates are scored with the app's cost
 model, beam-pruned, evaluated through the vectorized batch path, and the
 winning Mapple program + candidate leaderboard are printed. The legacy
 hand-tuned volume pair is checked as a regression oracle.
+
+``--simulate`` runs each selected app's mapped step through the
+discrete-event simulator (``repro.sim``): the plan's device permutation
+becomes the exact tile->processor assignment, the app's declared
+collective pattern expands into a wire schedule, and the engine prints
+the resulting per-step timeline (compute/network segments, in-flight
+depth, inter-node byte fraction).
+
+``--json PATH`` (with ``--tune`` or ``--simulate``) additionally writes
+the machine-readable results — for ``--tune`` the winner program/IR and
+full leaderboard per app, so sim-vs-volume winner comparisons can be
+scripted.
 """
 from __future__ import annotations
 
@@ -64,7 +77,25 @@ def analyze(app, procs: int | None) -> dict:
     }
 
 
-def tune(selection, procs: int | None, report=print) -> int:
+def _finish(procs: int | None, json_rows: list, failures: list[str],
+            json_path: str | None, report) -> int:
+    """Shared mode epilogue: JSON envelope + failure report + exit code."""
+    if json_path:
+        import json
+        from pathlib import Path
+
+        Path(json_path).write_text(json.dumps(
+            {"procs_requested": procs, "apps": json_rows}, indent=2) + "\n")
+        report(f"wrote {json_path}")
+    if failures:
+        for f in failures:
+            print(f"ERROR: {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def tune(selection, procs: int | None, report=print,
+         json_path: str | None = None) -> int:
     """Run the autotuner over the selected apps; nonzero on any failure."""
     import time
 
@@ -72,6 +103,7 @@ def tune(selection, procs: int | None, report=print) -> int:
 
     failures = []
     tuned = 0
+    json_rows = []
     t0 = time.perf_counter()
     for app in selection:
         if app.search_space is None:
@@ -82,6 +114,12 @@ def tune(selection, procs: int | None, report=print) -> int:
         for line in report_lines(rep):
             report(line)
         report("")
+        if json_path:
+            json_rows.append({
+                **rep.summary(),
+                "best_source": rep.best_source,
+                "leaderboard": [s.row() for s in rep.leaderboard],
+            })
         if not rep.verified:
             failures.append(f"{app.name}: rendered DSL diverged from the IR")
         if not rep.oracle_ok:
@@ -99,11 +137,53 @@ def tune(selection, procs: int | None, report=print) -> int:
                 )
     report(f"tuned {tuned} of {len(selection)} app(s) in "
            f"{time.perf_counter() - t0:.2f}s")
-    if failures:
-        for f in failures:
-            print(f"ERROR: {f}", file=sys.stderr)
-        return 1
-    return 0
+    return _finish(procs, json_rows, failures, json_path, report)
+
+
+def simulate(selection, procs: int | None, report=print,
+             json_path: str | None = None) -> int:
+    """Run the discrete-event simulator over the selected apps."""
+    from repro.sim.cost import simulate_app
+
+    rows = []
+    failures = []
+    report(
+        f"{'app':10s} {'procs':>5s} {'grid':>10s} {'pattern':>16s} "
+        f"{'bp':>3s} {'compute_s':>10s} {'comm_s':>10s} {'step_s':>10s} "
+        f"{'flat_s':>10s} {'xnode%':>7s} {'inflt':>5s}"
+    )
+    for app in selection:
+        if getattr(app, "collective", None) is None:
+            report(f"[{app.name}] no collective pattern declared; skipping")
+            continue
+        try:
+            rep = simulate_app(app, procs)
+        except ValueError as e:
+            failures.append(f"{app.name}: {e}")
+            continue
+        rows.append(rep)
+        grid = "x".join(str(g) for g in rep.grid)
+        report(
+            f"{rep.app:10s} {rep.procs:5d} {grid:>10s} {rep.pattern:>16s} "
+            f"{rep.backpressure:3d} {rep.compute_s:10.3e} {rep.comm_s:10.3e} "
+            f"{rep.step_time_s:10.3e} {rep.flat_step_time_s:10.3e} "
+            f"{rep.inter_node_bytes_frac * 100:6.1f}% {rep.max_in_flight:5d}"
+            + (f"  {rep.note}" if rep.note else "")
+        )
+    max_lines = 24
+    for rep in rows:
+        report(f"\n[{rep.app}] step timeline "
+               f"({rep.n_phases} comm phases/step, first step shown):")
+        segs = [s for s in rep.timeline.segments
+                if s.step == 0 and s.label != "step_done"]
+        for seg in segs[:max_lines]:
+            report(f"  {seg.resource:8s} {seg.start * 1e3:9.4f}ms "
+                   f"-> {seg.end * 1e3:9.4f}ms  {seg.label}")
+        if len(segs) > max_lines:
+            report(f"  ... {len(segs) - max_lines} more segments "
+                   f"(--json for the full timeline)")
+    return _finish(procs, [r.summary() for r in rows], failures,
+                   json_path, report)
 
 
 def report_table(rows, report=print) -> None:
@@ -151,15 +231,26 @@ def main(argv=None) -> int:
     ap.add_argument("--tune", action="store_true",
                     help="run the mapper autotuner over each app's search "
                          "space and print the winning program + leaderboard")
+    ap.add_argument("--simulate", action="store_true",
+                    help="run each app's mapped step through the "
+                         "discrete-event simulator and print the timeline")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="with --tune/--simulate: write machine-readable "
+                         "results (leaderboard + winner IR / timelines)")
     ap.add_argument("--list", action="store_true",
                     help="list registered applications")
     args = ap.parse_args(argv)
 
     if args.procs is not None and args.procs < 1:
         ap.error(f"--procs must be >= 1, got {args.procs}")
-    if args.tune and (args.execute or args.show_ir):
+    if args.tune and (args.execute or args.show_ir or args.simulate):
         ap.error("--tune is a separate mode; run it without "
+                 "--execute/--show-ir/--simulate")
+    if args.simulate and (args.execute or args.show_ir):
+        ap.error("--simulate is a separate mode; run it without "
                  "--execute/--show-ir")
+    if args.json and not (args.tune or args.simulate):
+        ap.error("--json requires --tune or --simulate")
 
     if args.execute:
         # Must happen before JAX initializes its backends. Append to any
@@ -192,7 +283,9 @@ def main(argv=None) -> int:
         ap.error("pass --app NAME, --all, or --list")
 
     if args.tune:
-        return tune(selection, args.procs)
+        return tune(selection, args.procs, json_path=args.json)
+    if args.simulate:
+        return simulate(selection, args.procs, json_path=args.json)
 
     rows = [analyze(app, args.procs) for app in selection]
     report_table(rows)

@@ -217,6 +217,11 @@ class CostModel:
     Implementations raise ``ValueError`` for factor tuples the model cannot
     use (wrong arity, Cannon's square-grid requirement, ...); enumerative
     consumers catch it and skip the candidate.
+
+    The protocol is unit-agnostic: the models in this module return
+    communication volumes (elements or bytes), while
+    ``repro.sim.cost.SimulatedTimeCostModel`` returns predicted *seconds*
+    from the discrete-event simulator — the same consumers rank either.
     """
 
     name: str = "cost"

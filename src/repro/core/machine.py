@@ -38,7 +38,15 @@ SYSMEM = "unpinned_host"
 
 @dataclasses.dataclass(frozen=True)
 class MachineSpec:
-    """Physical description of the target machine."""
+    """Physical description of the target machine.
+
+    ``link_bws`` is the per-level interconnect bandwidth tuple, outermost
+    level first: bytes/s one *port* (an endpoint's injection path) can
+    push through that level's fabric. When omitted it is derived from the
+    legacy two-fabric constants: the outermost level of a multi-level
+    machine gets ``dci_bw`` (one NIC), every other level the per-chip
+    ICI aggregate ``ici_bw * ici_links``.
+    """
 
     shape: tuple[int, ...]                 # e.g. (2, 256) pods x chips
     level_names: tuple[str, ...]           # e.g. ("pod", "chip")
@@ -49,6 +57,22 @@ class MachineSpec:
     ici_links: int = ICI_LINKS_PER_CHIP
     dci_bw: float = DCI_BW_PER_CHIP
     hbm_bytes: int = HBM_BYTES
+    link_bws: tuple[float, ...] | None = None   # per-level, outermost first
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.level_names):
+            raise ValueError(
+                f"shape {self.shape} and level_names {self.level_names} "
+                f"must have the same rank"
+            )
+        if self.link_bws is not None:
+            if len(self.link_bws) != len(self.shape):
+                raise ValueError(
+                    f"link_bws needs one bandwidth per level: got "
+                    f"{len(self.link_bws)} for {len(self.shape)} levels"
+                )
+            if any(bw <= 0 for bw in self.link_bws):
+                raise ValueError(f"link bandwidths must be > 0: {self.link_bws}")
 
     @property
     def nprocs(self) -> int:
@@ -57,20 +81,53 @@ class MachineSpec:
             out *= s
         return out
 
+    @property
+    def level_bws(self) -> tuple[float, ...]:
+        """Per-level port bandwidth, outermost first (always full-rank)."""
+        if self.link_bws is not None:
+            return self.link_bws
+        k = len(self.shape)
+        chip = self.ici_bw * self.ici_links
+        if k == 1:
+            return (chip,)
+        return (self.dci_bw,) + (chip,) * (k - 1)
+
     def link_bw(self, level: int) -> float:
-        """Bandwidth of the interconnect at hierarchy level (0 = outermost)."""
-        return self.dci_bw if level == 0 and len(self.shape) > 1 else self.ici_bw
+        """Port bandwidth of the interconnect at level (0 = outermost)."""
+        if not 0 <= level < len(self.shape):
+            raise ValueError(
+                f"level {level} out of range for a {len(self.shape)}-level "
+                f"machine {self.shape}"
+            )
+        return self.level_bws[level]
 
 
 def modeled_step_time(flops_total: float, comm_elems: float, chips: int,
-                      *, elem_bytes: int = 4) -> float:
-    """Modeled step time on the v5e fabric: compute and communication
+                      *, elem_bytes: int = 4,
+                      spec: "MachineSpec | None" = None) -> float:
+    """Modeled step time on a FLAT fabric: compute and communication
     overlap, the shorter leg costs a 10% tax. The single time model behind
     the Table 2 speedups (benchmarks/mapper_tuning.py) and the
     heuristic-gap margins (benchmarks/heuristic_gap.py) — shared so the
-    two harnesses can never drift onto different fabric assumptions."""
-    link = ICI_BW_PER_LINK * ICI_LINKS_PER_CHIP
-    compute = flops_total / (chips * PEAK_FLOPS_BF16)
+    two harnesses can never drift onto different fabric assumptions.
+
+    This is the documented fast-path fallback of the discrete-event
+    simulator (``repro.sim``): it equals the simulator's flat-topology
+    special case (all processors on one level, uniform all-to-neighbour
+    traffic) up to the 10% overlap tax — asserted by
+    ``tests/test_sim.py::test_flat_topology_matches_modeled_step_time``.
+    Hierarchy-aware questions (inter-node vs intra-node bytes) go to the
+    simulator; this stays the cheap single-formula answer. ``spec`` routes
+    the bandwidth through the per-level ``MachineSpec.link_bw`` tuple
+    (innermost level); the default keeps the legacy v5e flat fabric.
+    """
+    if spec is None:
+        link = ICI_BW_PER_LINK * ICI_LINKS_PER_CHIP
+        peak = PEAK_FLOPS_BF16
+    else:
+        link = spec.link_bw(len(spec.shape) - 1)
+        peak = spec.peak_flops
+    compute = flops_total / (chips * peak)
     comm = comm_elems * elem_bytes / (chips * link)
     return max(compute, comm) + 0.1 * min(compute, comm)
 

@@ -17,6 +17,13 @@ remaining Mapple directives translate to:
   Layout      -> operand dim-order permutation hints
   GarbageCollect -> buffer donation sets (donate_argnums)
   Backpressure   -> bounded async dispatch depth in the step loop
+                    (and the simulator's in-flight step bound)
+
+The resulting :class:`MappingPlan` is also the simulator's input contract
+(``repro.sim.cost.simulate_app``): ``meta['device_permutation']``
+reshaped to ``meta['tile_grid']`` is the exact tile->processor
+assignment the collective schedules expand against, and
+``backpressure`` bounds the engine's in-flight step depth.
 """
 from __future__ import annotations
 

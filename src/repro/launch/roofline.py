@@ -77,7 +77,10 @@ def terms(
     bytes_accessed = float(cost.get("bytes accessed", 0.0))
     compute_s = flops / hw.PEAK_FLOPS_BF16
     memory_s = bytes_accessed / hw.HBM_BW
-    link_bw = hw.ICI_BW_PER_LINK * hw.ICI_LINKS_PER_CHIP
+    # Innermost-level port bandwidth of the canonical pod (the per-chip
+    # ICI aggregate) via the per-level MachineSpec tuple, so the roofline
+    # and the simulator (repro.sim) share one fabric description.
+    link_bw = hw.V5E_POD.link_bw(len(hw.V5E_POD.shape) - 1)
     collective_s = collective_bytes / link_bw
     mf = model_flops(cfg, shape)
     ratio = mf / max(flops * n_chips, 1.0)

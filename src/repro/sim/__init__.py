@@ -1,0 +1,43 @@
+"""Discrete-event distributed-execution simulator (the repo's fabric truth).
+
+Predicts per-step wall-clock time for a mapped application:
+
+  ``topology``     hierarchical alpha-beta network from a MachineSpec
+                   (per-level latency/bandwidth, port contention)
+  ``collectives``  wire schedules for the patterns the nine apps emit,
+                   derived from the exact tile->processor assignment
+  ``engine``       event-queue execution of compute segments overlapped
+                   with comm streams, Backpressure = in-flight depth
+  ``cost``         SimulatedTimeCostModel: the simulator behind the
+                   CostModel protocol, so the tuner optimizes seconds
+
+See docs/simulator.md. ``machine.modeled_step_time`` remains the
+documented flat-topology fast path.
+"""
+from repro.sim.collectives import CollectivePattern, Phase, build_phases
+from repro.sim.cost import (
+    SimReport,
+    SimulatedTimeCostModel,
+    simulate_app,
+    spec_for,
+    time_search_space,
+    time_tuned_app,
+)
+from repro.sim.engine import Timeline, simulate_steps, simulate_tasks
+from repro.sim.topology import Topology
+
+__all__ = [
+    "CollectivePattern",
+    "Phase",
+    "SimReport",
+    "SimulatedTimeCostModel",
+    "Timeline",
+    "Topology",
+    "build_phases",
+    "simulate_app",
+    "simulate_steps",
+    "simulate_tasks",
+    "spec_for",
+    "time_search_space",
+    "time_tuned_app",
+]

@@ -1,0 +1,400 @@
+"""Collective communication schedules for the patterns the nine apps emit.
+
+Every builder turns one *logical* collective into a list of
+:class:`Phase` objects — sets of point-to-point transfers that run
+concurrently, with phases executing in order. Crucially the endpoints are
+**physical processor ids taken from the mapper's assignment grid**, so
+tile->processor placement (and therefore node-crossing) is exact, not
+averaged: two mappers with identical communication *volume* produce
+different schedules when one keeps neighbours on a node and the other
+scatters them round-robin.
+
+Patterns (paper Sec. 6 workloads + the transpose/MoE all-to-all):
+
+  ``halo``              face exchange with each grid neighbour (stencil,
+                        PENNANT; per-axis wraparound matches the tuner's
+                        locality metric)
+  ``shift``             systolic ring shifts of A/B tiles (Cannon)
+  ``panel_broadcast``   per-round row/column panel broadcasts
+                        (SUMMA, PUMMA)
+  ``bcast_reduce_3d``   operand broadcasts + C reduction along the grid
+                        axes (Johnson, COSMA)
+  ``replicated_shift``  2.5D: replicate over c, shifted rounds, reduce
+                        over c (Solomonik)
+  ``gather_scatter``    ring all-gather(V) + ring reduce-scatter(Q)
+                        (circuit)
+  ``alltoall``          pairwise exchange (transpose / MoE dispatch)
+
+Primitive schedules (ring all-gather / reduce-scatter, ring or binomial
+tree all-reduce, binomial broadcast/reduce) are exposed for new patterns;
+``build_phases`` dispatches a declared :class:`CollectivePattern` for an
+application grid + assignment. See docs/simulator.md for how to add one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One set of concurrent point-to-point transfers."""
+
+    label: str
+    src: np.ndarray           # flat physical processor ids
+    dst: np.ndarray
+    nbytes: np.ndarray        # per-transfer payload bytes
+
+    @property
+    def total_bytes(self) -> float:
+        return float(np.sum(self.nbytes))
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectivePattern:
+    """An application's declared communication pattern + static parameters.
+
+    ``params`` holds problem constants (matrix dims, iteration lengths,
+    halo field counts, ...); everything grid-dependent is derived inside
+    the builder so one declaration scales with the processor count.
+    """
+
+    kind: str
+    params: dict = dataclasses.field(default_factory=dict)
+
+
+def _phase(label: str, transfers: Sequence[tuple[int, int, float]]) -> Phase:
+    """Build a Phase, dropping same-processor (local) transfers."""
+    keep = [(s, d, b) for s, d, b in transfers if s != d]
+    if not keep:
+        return Phase(label, np.empty(0, np.int64), np.empty(0, np.int64),
+                     np.empty(0, np.float64))
+    src, dst, nbytes = zip(*keep)
+    return Phase(label, np.asarray(src, np.int64), np.asarray(dst, np.int64),
+                 np.asarray(nbytes, np.float64))
+
+
+# ----------------------------------------------------------- primitive rings
+def ring_allgather(group: Sequence[int], total_bytes: float,
+                   label: str = "all_gather") -> list[Phase]:
+    """Ring all-gather of ``total_bytes`` split over the group: p-1 rounds,
+    each member forwarding one shard (bytes/p) to its ring successor."""
+    group = [int(g) for g in group]
+    p = len(group)
+    if p <= 1:
+        return []
+    shard = total_bytes / p
+    return [
+        _phase(f"{label}[{r}]",
+               [(group[i], group[(i + 1) % p], shard) for i in range(p)])
+        for r in range(p - 1)
+    ]
+
+
+def ring_reduce_scatter(group: Sequence[int], total_bytes: float,
+                        label: str = "reduce_scatter") -> list[Phase]:
+    """Same wire schedule as the all-gather ring, reducing as it goes."""
+    return ring_allgather(group, total_bytes, label=label)
+
+
+def ring_allreduce(group: Sequence[int], total_bytes: float,
+                   label: str = "all_reduce") -> list[Phase]:
+    """Reduce-scatter + all-gather: 2(p-1) rounds of bytes/p shards."""
+    return (ring_reduce_scatter(group, total_bytes, label=f"{label}/rs")
+            + ring_allgather(group, total_bytes, label=f"{label}/ag"))
+
+
+# ------------------------------------------------------------ primitive trees
+def _tree_rounds(p: int) -> list[list[tuple[int, int]]]:
+    """Binomial doubling rounds as (src_index, dst_index) pairs in a group."""
+    rounds: list[list[tuple[int, int]]] = []
+    have = 1
+    while have < p:
+        rounds.append([(i, i + have) for i in range(min(have, p - have))])
+        have *= 2
+    return rounds
+
+
+def concurrent_tree_broadcast(groups: Sequence[Sequence[int]], nbytes: float,
+                              label: str = "bcast") -> list[Phase]:
+    """Binomial broadcasts from each group's first member, with all groups
+    progressing in lockstep — one congestion-priced phase per tree round,
+    so disjoint groups (e.g. the rows of a SUMMA grid) genuinely overlap."""
+    groups = [[int(g) for g in grp] for grp in groups if len(grp) > 1]
+    if not groups:
+        return []
+    phases: list[Phase] = []
+    for r, rnd in enumerate(_tree_rounds(max(len(g) for g in groups))):
+        sends = [
+            (grp[i], grp[j], nbytes)
+            for grp in groups for i, j in rnd if j < len(grp)
+        ]
+        phases.append(_phase(f"{label}[{r}]", sends))
+    return phases
+
+
+def concurrent_tree_reduce(groups: Sequence[Sequence[int]], nbytes: float,
+                           label: str = "reduce") -> list[Phase]:
+    """The broadcast wire schedule run backwards: reduce to each group's
+    first member, all groups in lockstep."""
+    return [
+        Phase(ph.label, ph.dst, ph.src, ph.nbytes)
+        for ph in reversed(concurrent_tree_broadcast(groups, nbytes, label))
+    ]
+
+
+def tree_broadcast(group: Sequence[int], nbytes: float,
+                   label: str = "bcast") -> list[Phase]:
+    """Binomial-tree broadcast from group[0]: ceil(log2 p) doubling rounds."""
+    return concurrent_tree_broadcast([group], nbytes, label=label)
+
+
+def tree_reduce(group: Sequence[int], nbytes: float,
+                label: str = "reduce") -> list[Phase]:
+    """Binomial-tree reduction to group[0] (the broadcast run backwards)."""
+    return concurrent_tree_reduce([group], nbytes, label=label)
+
+
+def tree_allreduce(group: Sequence[int], nbytes: float,
+                   label: str = "all_reduce") -> list[Phase]:
+    """Reduce-to-root + broadcast: 2*ceil(log2 p) rounds of full payloads.
+
+    Cheaper than the ring for latency-bound (small) payloads; callers pick
+    via :func:`allreduce`.
+    """
+    return (tree_reduce(group, nbytes, label=f"{label}/red")
+            + tree_broadcast(group, nbytes, label=f"{label}/bc"))
+
+
+def allreduce(group: Sequence[int], total_bytes: float, *,
+              alpha: float = 1e-6, beta: float = 1e11,
+              label: str = "all_reduce") -> list[Phase]:
+    """Ring-or-tree all-reduce, picking the cheaper schedule by the
+    uncontended alpha-beta estimate (rings win on bandwidth, trees on
+    latency)."""
+    p = len(group)
+    if p <= 1:
+        return []
+    import math
+
+    rounds_tree = 2 * math.ceil(math.log2(p))
+    t_ring = 2 * (p - 1) * (alpha + (total_bytes / p) / beta)
+    t_tree = rounds_tree * (alpha + total_bytes / beta)
+    if t_tree < t_ring:
+        return tree_allreduce(group, total_bytes, label=label)
+    return ring_allreduce(group, total_bytes, label=label)
+
+
+def alltoall(group: Sequence[int], bytes_per_pair: float,
+             label: str = "all_to_all") -> list[Phase]:
+    """Full pairwise exchange in one congestion-priced phase: every member
+    sends ``bytes_per_pair`` to every other (transpose / MoE dispatch)."""
+    group = [int(g) for g in group]
+    sends = [
+        (s, d, bytes_per_pair)
+        for s in group for d in group if s != d
+    ]
+    return [_phase(label, sends)] if sends else []
+
+
+# ------------------------------------------------------------- grid utilities
+def _assignment(grid: Sequence[int], assignment: np.ndarray) -> np.ndarray:
+    a = np.asarray(assignment, dtype=np.int64)
+    grid = tuple(int(g) for g in grid)
+    if a.shape != grid:
+        raise ValueError(
+            f"assignment shape {a.shape} does not match tile grid {grid}"
+        )
+    return a
+
+
+def _shift_phases(assign: np.ndarray, axis: int, step: int, nbytes: float,
+                  label: str) -> Phase:
+    """Every tile sends ``nbytes`` to the tile ``step`` away along ``axis``
+    (wraparound): the systolic / halo neighbour structure."""
+    dst = np.roll(assign, -step, axis=axis)
+    return _phase(label, list(zip(assign.reshape(-1).tolist(),
+                                  dst.reshape(-1).tolist(),
+                                  [nbytes] * assign.size)))
+
+
+def _axis_groups(assign: np.ndarray, axis: int) -> list[list[int]]:
+    """Processor groups along one grid axis (all other coordinates fixed)."""
+    moved = np.moveaxis(assign, axis, -1)
+    return [list(map(int, row)) for row in moved.reshape(-1, assign.shape[axis])]
+
+
+# ------------------------------------------------------------ pattern builders
+def _halo_phases(pattern: CollectivePattern, grid: tuple[int, ...],
+                 assign: np.ndarray, elem_bytes: int) -> list[Phase]:
+    lengths = pattern.params["lengths"]
+    fields = int(pattern.params.get("fields", 1))
+    if len(lengths) != len(grid):
+        raise ValueError(
+            f"halo grid rank {len(grid)} != iteration rank {len(lengths)}"
+        )
+    phases = []
+    for axis in range(len(grid)):
+        if grid[axis] == 1:
+            continue
+        face_elems = 1.0
+        for m in range(len(grid)):
+            if m != axis:
+                face_elems *= lengths[m] / grid[m]
+        face_bytes = fields * face_elems * elem_bytes
+        for step, side in ((1, "+"), (-1, "-")):
+            phases.append(_shift_phases(
+                assign, axis, step, face_bytes, f"halo[ax{axis}{side}]"))
+    return phases
+
+
+def _shift_pattern_phases(pattern: CollectivePattern, grid: tuple[int, ...],
+                          assign: np.ndarray, elem_bytes: int) -> list[Phase]:
+    m, n, k = (pattern.params[key] for key in ("m", "n", "k"))
+    if len(grid) != 2 or grid[0] != grid[1]:
+        raise ValueError(f"systolic shift needs a square 2D grid, got {grid}")
+    q = grid[0]
+    tile_a = (m / q) * (k / q) * elem_bytes
+    tile_b = (k / q) * (n / q) * elem_bytes
+    phases = []
+    for r in range(max(q - 1, 0)):
+        phases.append(_shift_phases(assign, 1, 1, tile_a, f"shiftA[{r}]"))
+        phases.append(_shift_phases(assign, 0, 1, tile_b, f"shiftB[{r}]"))
+    return phases
+
+
+def _panel_broadcast_phases(pattern: CollectivePattern, grid: tuple[int, ...],
+                            assign: np.ndarray, elem_bytes: int) -> list[Phase]:
+    m, n, k = (pattern.params[key] for key in ("m", "n", "k"))
+    if len(grid) != 2:
+        raise ValueError(f"panel broadcast needs a 2D grid, got {grid}")
+    pr, pc = grid
+    rounds = max(pr, pc)
+    panel_a = (m / pr) * (k / rounds) * elem_bytes   # A panel along the row
+    panel_b = (k / rounds) * (n / pc) * elem_bytes   # B panel down the column
+    phases: list[Phase] = []
+    for r in range(rounds):
+        # Round r: column (r % pc) roots broadcast A along each row, row
+        # (r % pr) roots broadcast B along each column; all rows (resp.
+        # columns) progress concurrently.
+        row_groups = [
+            [int(assign[row, (r + j) % pc]) for j in range(pc)]
+            for row in range(pr)
+        ]
+        col_groups = [
+            [int(assign[(r + i) % pr, col]) for i in range(pr)]
+            for col in range(pc)
+        ]
+        phases.extend(concurrent_tree_broadcast(
+            row_groups, panel_a, label=f"bcastA[{r}]"))
+        phases.extend(concurrent_tree_broadcast(
+            col_groups, panel_b, label=f"bcastB[{r}]"))
+    return phases
+
+
+def _bcast_reduce_3d_phases(pattern: CollectivePattern, grid: tuple[int, ...],
+                            assign: np.ndarray, elem_bytes: int) -> list[Phase]:
+    m, n, k = (pattern.params[key] for key in ("m", "n", "k"))
+    if len(grid) != 3:
+        raise ValueError(f"3D bcast+reduce needs a 3D grid, got {grid}")
+    q1, q2, q3 = grid
+    tile_a = (m / q1) * (k / q3) * elem_bytes
+    tile_b = (k / q3) * (n / q2) * elem_bytes
+    tile_c = (m / q1) * (n / q2) * elem_bytes
+    # A(i, :, l) is broadcast along the j axis, B(:, j, l) along i, and the
+    # C(i, j, :) partials reduce along the k axis — Johnson's 3D schedule,
+    # every group along an axis progressing concurrently.
+    return (
+        concurrent_tree_broadcast(_axis_groups(assign, 1), tile_a, "bcastA")
+        + concurrent_tree_broadcast(_axis_groups(assign, 0), tile_b, "bcastB")
+        + concurrent_tree_reduce(_axis_groups(assign, 2), tile_c, "reduceC")
+    )
+
+
+def _replicated_shift_phases(pattern: CollectivePattern, grid: tuple[int, ...],
+                             assign: np.ndarray, elem_bytes: int) -> list[Phase]:
+    m, n, k = (pattern.params[key] for key in ("m", "n", "k"))
+    if len(grid) != 3 or grid[0] != grid[1]:
+        raise ValueError(f"2.5D shift needs a (q, q, c) grid, got {grid}")
+    q, _, c = grid
+    tile_a = (m / q) * (k / q) * elem_bytes
+    tile_b = (k / q) * (n / q) * elem_bytes
+    tile_c = (m / q) * (n / q) * elem_bytes
+    phases: list[Phase] = []
+    if c > 1:
+        # Replicate the initial A/B layer over the c axis.
+        phases.extend(concurrent_tree_broadcast(
+            _axis_groups(assign, 2), tile_a + tile_b, "replAB"))
+    for r in range(max(q // max(c, 1) - 1, 0)):
+        # All c layers shift concurrently; the shift over the full 3D
+        # assignment rolls only the (q, q) plane coordinates.
+        phases.append(_shift_phases(assign, 1, 1, tile_a, f"shiftA[{r}]"))
+        phases.append(_shift_phases(assign, 0, 1, tile_b, f"shiftB[{r}]"))
+    if c > 1:
+        phases.extend(concurrent_tree_reduce(
+            _axis_groups(assign, 2), tile_c, "reduceC"))
+    return phases
+
+
+def _gather_scatter_phases(pattern: CollectivePattern, grid: tuple[int, ...],
+                           assign: np.ndarray, elem_bytes: int) -> list[Phase]:
+    if len(grid) != 1:
+        raise ValueError(f"gather/scatter needs a 1D piece grid, got {grid}")
+    npp = pattern.params["nodes_per_piece"]
+    discount = float(pattern.params.get("discount", 1.0))
+    procs = [int(p) for p in assign.reshape(-1)]
+    total = discount * npp * len(procs) * elem_bytes
+    return (ring_allgather(procs, total, label="gatherV")
+            + ring_reduce_scatter(procs, total, label="scatterQ"))
+
+
+def _alltoall_phases(pattern: CollectivePattern, grid: tuple[int, ...],
+                     assign: np.ndarray, elem_bytes: int) -> list[Phase]:
+    per_pair = pattern.params["elems_per_pair"] * elem_bytes
+    procs = [int(p) for p in assign.reshape(-1)]
+    return alltoall(procs, per_pair)
+
+
+_BUILDERS = {
+    "halo": _halo_phases,
+    "shift": _shift_pattern_phases,
+    "panel_broadcast": _panel_broadcast_phases,
+    "bcast_reduce_3d": _bcast_reduce_3d_phases,
+    "replicated_shift": _replicated_shift_phases,
+    "gather_scatter": _gather_scatter_phases,
+    "alltoall": _alltoall_phases,
+}
+
+
+def build_phases(pattern: CollectivePattern, grid: Sequence[int],
+                 assignment: np.ndarray, *, elem_bytes: int = 4
+                 ) -> list[Phase]:
+    """One step's communication schedule for ``pattern`` under the exact
+    tile->processor ``assignment`` (shape == ``grid``)."""
+    try:
+        builder = _BUILDERS[pattern.kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown collective pattern {pattern.kind!r}; "
+            f"known: {sorted(_BUILDERS)}"
+        ) from None
+    grid = tuple(int(g) for g in grid)
+    assign = _assignment(grid, assignment)
+    return builder(pattern, grid, assign, elem_bytes)
+
+
+__all__ = [
+    "CollectivePattern",
+    "Phase",
+    "allreduce",
+    "alltoall",
+    "build_phases",
+    "ring_allgather",
+    "ring_allreduce",
+    "ring_reduce_scatter",
+    "tree_allreduce",
+    "tree_broadcast",
+    "tree_reduce",
+]

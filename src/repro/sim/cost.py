@@ -1,0 +1,341 @@
+"""Time-domain cost: the simulator packaged as a PR-3 ``CostModel``.
+
+Two entry points:
+
+  * :func:`simulate_app` — one application's mapped step through the
+    full pipeline (``dsl.parse -> Mapper -> translate.to_spmd``), its
+    declared :class:`CollectivePattern` expanded against the *exact*
+    tile->processor assignment, executed on the event-queue engine. This
+    is what ``python -m repro.apps.run --simulate`` prints.
+
+  * :class:`SimulatedTimeCostModel` — the same machinery behind the
+    ``CostModel.cost(grid) -> float`` protocol, returning predicted
+    seconds per step instead of element counts, so the mapper autotuner
+    (``repro.search.tuner``) optimizes simulated time **unchanged**:
+    :func:`time_tuned_app` wraps an Application so ``tune_app`` searches
+    on seconds. Volume models stay the validity filter (a grid the
+    volume model rejects is never simulated), and
+    ``benchmarks/sim_eval.py`` asserts registry-wide that time-optimal
+    winners never regress the Table 2 volume oracles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.commvolume import CostModel
+from repro.core.machine import GPU, MachineSpec
+from repro.sim.collectives import CollectivePattern, Phase, build_phases
+from repro.sim.engine import Timeline, simulate_steps
+from repro.sim.topology import Topology
+
+DEFAULT_STEPS = 3
+DEFAULT_ELEM_BYTES = 4
+
+
+def spec_for(machine_shape: Sequence[int], kind: str = GPU) -> MachineSpec:
+    """A MachineSpec for an app's ``(nodes, gpus)`` machine policy shape."""
+    shape = tuple(int(s) for s in machine_shape)
+    names = ("node", "gpu", "lane", "sublane")[: len(shape)]
+    if len(names) < len(shape):
+        names = tuple(f"l{i}" for i in range(len(shape)))
+    return MachineSpec(shape=shape, level_names=tuple(names), kind=kind)
+
+
+def _node_split(machine_shape: Sequence[int], grid: tuple[int, ...],
+                local_axes: Sequence[int] = ()) -> tuple[int, ...] | None:
+    """Per-axis node factors for the default placement of ``grid`` on a
+    two-level machine.
+
+    Among all divisible ordered factorizations of the node count, prefer
+    (in order): the smallest node factor on ``local_axes`` — the axes a
+    pattern declares its heavy collective groups run along, which an
+    expert mapper keeps on the fast intra-node fabric (e.g. Solomonik's
+    ``c`` replication axis, the analogue of placing TP inside a node and
+    DP across nodes) — then the minimal cross-node surface, then
+    lexicographic order for determinism. Returns ``None`` when the
+    machine degenerates to one level or no divisible split exists.
+    """
+    from repro.core.commvolume import halo_surface_volume
+    from repro.core.decompose import enumerate_factorizations
+
+    if len(machine_shape) != 2:
+        # Deeper hierarchies take the flat fallback; only the canonical
+        # two-level (nodes, gpus) machines get a hierarchical split.
+        return None
+    nodes, gpus = (int(s) for s in machine_shape)
+    if nodes <= 1 or gpus <= 1:
+        return None
+    best: tuple[tuple, tuple[int, ...]] | None = None
+    for nf in enumerate_factorizations(nodes, len(grid)):
+        if any(g % f for g, f in zip(grid, nf)):
+            continue
+        local_pen = 1
+        for a in local_axes:
+            local_pen *= nf[a]
+        key = (local_pen, halo_surface_volume(grid, nf), nf)
+        if best is None or key < best[0]:
+            best = (key, nf)
+    return None if best is None else best[1]
+
+
+def default_assignment(machine_shape: Sequence[int],
+                       grid: Sequence[int],
+                       local_axes: Sequence[int] = ()) -> np.ndarray:
+    """The default placement of a tile grid on a two-level machine:
+    hierarchical block/block (contiguous per-axis blocks per node, blocks
+    of the remainder within a node — the Fig. 12 shape the tuner's
+    default candidate materializes) when a divisible node split exists,
+    flat row-major block otherwise."""
+    grid = tuple(int(g) for g in grid)
+    coords = np.indices(grid)
+    nf = _node_split(machine_shape, grid, local_axes)
+    if nf is None:
+        return np.arange(int(np.prod(grid)), dtype=np.int64).reshape(grid)
+    gpus = int(machine_shape[1])
+    gf = tuple(g // f for g, f in zip(grid, nf))
+    node = np.zeros(grid, dtype=np.int64)
+    gpu = np.zeros(grid, dtype=np.int64)
+    for a in range(len(grid)):
+        node = node * nf[a] + coords[a] // gf[a]
+        gpu = gpu * gf[a] + coords[a] % gf[a]
+    return node * gpus + gpu
+
+
+def pattern_with_options(pattern: CollectivePattern,
+                         opts: dict) -> CollectivePattern:
+    """Fold tuner option axes into the pattern parameters. Currently the
+    only option that changes the wire schedule is circuit's ZCMEM
+    placement of the shared charge region, which removes a device round
+    trip (the Table 2 discount)."""
+    if pattern.kind == "gather_scatter" and opts.get("arg1") == "ZCMEM":
+        params = dict(pattern.params)
+        params["discount"] = float(params.get("zc_discount", 0.75))
+        return CollectivePattern(pattern.kind, params)
+    return pattern
+
+
+def inter_node_fraction(phases: Sequence[Phase], topo: Topology) -> float:
+    """Fraction of scheduled wire bytes crossing the outermost level."""
+    total = cross = 0.0
+    for ph in phases:
+        if ph.src.size == 0:
+            continue
+        levels = topo.crossing_levels(ph.src, ph.dst)
+        total += float(ph.nbytes.sum())
+        cross += float(ph.nbytes[levels == 0].sum())
+    return cross / total if total else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SimulatedTimeCostModel(CostModel):
+    """Predicted seconds per step of a candidate grid on a real fabric.
+
+    Drops into every ``CostModel`` consumer unchanged: the tuner's beam
+    search, ``decompose.optimal_factorization(objective=...)``, and the
+    leaderboards all rank on seconds. ``base`` (the app's volume model)
+    is the validity filter — candidates it rejects with ``ValueError``
+    are never simulated, keeping the two objectives' feasible sets
+    identical. ``assignment_fn`` maps a candidate grid to its
+    tile->processor assignment; the default is the tuner's default
+    placement on ``spec.shape``.
+    """
+
+    pattern: CollectivePattern
+    spec: MachineSpec
+    step_flops: float
+    base: CostModel | None = None
+    assignment_fn: Callable[[tuple[int, ...]], np.ndarray] | None = None
+    elem_bytes: int = DEFAULT_ELEM_BYTES
+    steps: int = DEFAULT_STEPS
+    backpressure: int = 2
+    name = "simulated_time"
+
+    def cost(self, factors: Sequence[int]) -> float:
+        grid = tuple(int(f) for f in factors)
+        if self.base is not None:
+            self.base.cost(grid)        # validity: propagate ValueError
+        if int(np.prod(grid)) != self.spec.nprocs:
+            raise ValueError(
+                f"grid {grid} does not cover {self.spec.nprocs} processors"
+            )
+        if self.assignment_fn is not None:
+            assign = np.asarray(self.assignment_fn(grid))
+        else:
+            assign = default_assignment(
+                self.spec.shape, grid,
+                self.pattern.params.get("local_axes", ()),
+            )
+        return self.simulate(grid, assign).per_step_time()
+
+    def simulate(self, grid: tuple[int, ...], assign: np.ndarray) -> Timeline:
+        topo = Topology.from_spec(self.spec)
+        phases = build_phases(self.pattern, grid, assign,
+                              elem_bytes=self.elem_bytes)
+        compute_s = self.step_flops / (self.spec.nprocs * self.spec.peak_flops)
+        return simulate_steps(
+            phases, topo, compute_s=compute_s, steps=self.steps,
+            backpressure=self.backpressure,
+        )
+
+
+# --------------------------------------------------------------- application
+@dataclasses.dataclass
+class SimReport:
+    """One simulated application step: the --simulate deliverable."""
+
+    app: str
+    procs: int
+    machine_shape: tuple[int, ...]
+    grid: tuple[int, ...]
+    pattern: str
+    backpressure: int
+    compute_s: float
+    comm_s: float                    # network busy time per simulated step
+    step_time_s: float               # steady-state seconds per step
+    makespan_s: float
+    flat_step_time_s: float          # machine.modeled_step_time fast path
+    inter_node_bytes_frac: float
+    n_phases: int
+    max_in_flight: int
+    timeline: Timeline
+    note: str = ""
+
+    def summary(self) -> dict:
+        return {
+            "note": self.note,
+            "app": self.app,
+            "procs": self.procs,
+            "machine": list(self.machine_shape),
+            "grid": list(self.grid),
+            "pattern": self.pattern,
+            "backpressure": self.backpressure,
+            "compute_s": self.compute_s,
+            "comm_s": self.comm_s,
+            "step_time_s": self.step_time_s,
+            "makespan_s": self.makespan_s,
+            "flat_step_time_s": self.flat_step_time_s,
+            "inter_node_bytes_frac": self.inter_node_bytes_frac,
+            "n_phases": self.n_phases,
+            "max_in_flight": self.max_in_flight,
+            "timeline": self.timeline.rows(),
+        }
+
+
+def simulate_app(app, procs: int | None = None, *,
+                 steps: int = DEFAULT_STEPS,
+                 elem_bytes: int = DEFAULT_ELEM_BYTES) -> SimReport:
+    """Simulate one registry application's mapped step end to end.
+
+    Runs the real pipeline (``app.spmd_plan`` = parse -> Mapper ->
+    translate), reshapes the plan's device permutation into the exact
+    tile->processor assignment, expands the app's declared collective
+    pattern against it, and executes ``steps`` iterations on the engine
+    honoring the plan's ``Backpressure`` depth.
+    """
+    from repro.core.machine import modeled_step_time
+
+    pattern = getattr(app, "collective", None)
+    if pattern is None:
+        raise ValueError(
+            f"application {app.name!r} declares no collective pattern; "
+            f"set Application.collective to simulate it"
+        )
+    n = app.procs(procs)
+    note = ""
+    try:
+        app.tile_grid(n)
+    except ValueError:
+        # Same fallback + user-visible note as the tuner's _feasible_procs.
+        note = (f"procs {n} infeasible for {app.name}; "
+                f"using default {app.default_procs}")
+        n = app.default_procs
+    plan = app.spmd_plan(n)
+    grid = tuple(plan.meta["tile_grid"])
+    assign = np.asarray(plan.meta["device_permutation"]).reshape(grid)
+    machine_shape = tuple(int(s) for s in app.machine_shape(n))
+    spec = spec_for(machine_shape)
+    topo = Topology.from_spec(spec)
+    phases = build_phases(pattern, grid, assign, elem_bytes=elem_bytes)
+    compute_s = app.step_flops(n) / (n * spec.peak_flops)
+    timeline = simulate_steps(
+        phases, topo, compute_s=compute_s, steps=steps,
+        backpressure=plan.backpressure,
+    )
+    return SimReport(
+        app=app.name,
+        procs=n,
+        machine_shape=machine_shape,
+        grid=grid,
+        pattern=pattern.kind,
+        backpressure=plan.backpressure,
+        compute_s=compute_s,
+        comm_s=timeline.busy("network") / max(steps, 1),
+        step_time_s=timeline.per_step_time(),
+        makespan_s=timeline.makespan,
+        flat_step_time_s=modeled_step_time(
+            app.step_flops(n), app.comm_volume(n), n, elem_bytes=elem_bytes,
+        ),
+        inter_node_bytes_frac=inter_node_fraction(phases, topo),
+        n_phases=len(phases),
+        max_in_flight=timeline.max_in_flight,
+        timeline=timeline,
+        note=note,
+    )
+
+
+def time_search_space(app, *, steps: int = DEFAULT_STEPS,
+                      elem_bytes: int = DEFAULT_ELEM_BYTES):
+    """The app's SearchSpace with its volume objective swapped for the
+    simulator — same grids, options, distributions and orders; only
+    ``cost_model`` changes, so the tuner runs unchanged."""
+    base_space = app.search_space
+    if base_space is None:
+        raise ValueError(f"application {app.name!r} declares no search space")
+    pattern = getattr(app, "collective", None)
+    if pattern is None:
+        raise ValueError(f"application {app.name!r} declares no collective")
+
+    def cost_model(procs: int, opts: dict) -> SimulatedTimeCostModel:
+        shape = tuple(int(s) for s in app.machine_shape(procs))
+        return SimulatedTimeCostModel(
+            pattern=pattern_with_options(pattern, opts),
+            spec=spec_for(shape),
+            step_flops=float(app.step_flops(procs)),
+            base=base_space.cost_model(procs, opts),
+            elem_bytes=elem_bytes,
+            steps=steps,
+        )
+
+    return dataclasses.replace(base_space, cost_model=cost_model)
+
+
+def time_tuned_app(app, *, steps: int = DEFAULT_STEPS,
+                   elem_bytes: int = DEFAULT_ELEM_BYTES):
+    """A copy of ``app`` whose tuner searches predicted seconds. The
+    legacy volume-pair oracle is dropped from the copy (its units are
+    elements, not seconds); ``benchmarks/sim_eval.py`` re-checks the
+    winner against the volume oracle explicitly."""
+    return dataclasses.replace(
+        app,
+        search_space=time_search_space(app, steps=steps,
+                                       elem_bytes=elem_bytes),
+        tuning=None,
+    )
+
+
+__all__ = [
+    "DEFAULT_ELEM_BYTES",
+    "DEFAULT_STEPS",
+    "SimReport",
+    "SimulatedTimeCostModel",
+    "default_assignment",
+    "inter_node_fraction",
+    "pattern_with_options",
+    "simulate_app",
+    "spec_for",
+    "time_search_space",
+    "time_tuned_app",
+]

@@ -1,0 +1,229 @@
+"""Discrete-event engine: compute segments overlapped with comm streams.
+
+The unit of simulation is a *task* — a segment of known duration bound to
+one serial resource (the lockstep SPMD ``compute`` stream or the shared
+``network`` stream) with dependency edges. A heap-based event queue pops
+the earliest completion, marks dependents ready, and dispatches every
+ready task whose resource is free; ties resolve deterministically by task
+key, so a simulation is a pure function of its inputs.
+
+:func:`simulate_steps` builds the step-loop task graph for an application:
+
+  * ``compute[s]`` depends on ``compute[s-1]`` (one accelerator stream) and
+    on ``comm[s - backpressure]`` completing — the ``Backpressure``
+    directive realized exactly as the training loop realizes it: at most
+    ``backpressure`` steps may be in flight before dispatch blocks on the
+    oldest step's completion;
+  * ``comm[s][p]`` (phase ``p`` of step ``s``) depends on ``comm[s][p-1]``
+    and, for the first phase, on ``compute[s]``; all comm segments share
+    the serial ``network`` resource, so communication of step ``s``
+    overlaps compute of steps ``s+1 .. s+backpressure-1``.
+
+Phase durations come from :meth:`Topology.phase_time`, i.e. they carry the
+exact port-contention cost of the tile->processor placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Hashable, Sequence
+
+from repro.sim.collectives import Phase
+from repro.sim.topology import Topology
+
+COMPUTE = "compute"
+NETWORK = "network"
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """One schedulable segment: fixed duration on a serial resource."""
+
+    key: Hashable
+    duration: float
+    resource: str
+    deps: tuple[Hashable, ...] = ()
+    step: int = -1
+    label: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One executed task on the timeline."""
+
+    key: Hashable
+    resource: str
+    start: float
+    end: float
+    step: int
+    label: str
+
+    def row(self) -> dict:
+        return {
+            "resource": self.resource,
+            "step": self.step,
+            "label": self.label,
+            "start": self.start,
+            "end": self.end,
+        }
+
+
+@dataclasses.dataclass
+class Timeline:
+    """The executed schedule: segments plus derived step metrics."""
+
+    segments: list[Segment]
+    makespan: float
+    steps: int
+
+    def step_interval(self, step: int) -> tuple[float, float]:
+        segs = [s for s in self.segments if s.step == step]
+        return (min(s.start for s in segs), max(s.end for s in segs))
+
+    @property
+    def max_in_flight(self) -> int:
+        """Peak number of steps simultaneously active (dispatched, not yet
+        fully retired) — the quantity ``Backpressure`` bounds."""
+        events: list[tuple[float, int]] = []
+        for s in range(self.steps):
+            t0, t1 = self.step_interval(s)
+            events.append((t0, 1))
+            events.append((t1, -1))
+        peak = cur = 0
+        # Retirements at time t free a slot before dispatches at time t.
+        for _, delta in sorted(events, key=lambda e: (e[0], e[1])):
+            cur += delta
+            peak = max(peak, cur)
+        return peak
+
+    def busy(self, resource: str) -> float:
+        return sum(s.end - s.start for s in self.segments
+                   if s.resource == resource)
+
+    def per_step_time(self) -> float:
+        """Steady-state seconds per step: the marginal cost of the last
+        step when more than one ran, else the makespan."""
+        if self.steps <= 1:
+            return self.makespan
+        prev_end = self.step_interval(self.steps - 2)[1]
+        return max(self.makespan - prev_end, 0.0) or self.makespan / self.steps
+
+    def rows(self) -> list[dict]:
+        return [s.row() for s in self.segments]
+
+
+def simulate_tasks(tasks: Sequence[Task]) -> Timeline:
+    """Run the dependency graph through the event queue; returns the
+    executed timeline. Deterministic: ready ties dispatch in key order."""
+    by_key = {t.key: t for t in tasks}
+    missing = {d for t in tasks for d in t.deps if d not in by_key}
+    if missing:
+        raise ValueError(f"tasks depend on unknown keys: {sorted(map(str, missing))}")
+    remaining = {t.key: len(t.deps) for t in tasks}
+    dependents: dict[Hashable, list[Hashable]] = {}
+    for t in tasks:
+        for d in t.deps:
+            dependents.setdefault(d, []).append(t.key)
+
+    order = {t.key: i for i, t in enumerate(tasks)}   # deterministic ties
+    ready: dict[str, list[tuple[int, Hashable]]] = {}
+    for t in tasks:
+        if remaining[t.key] == 0:
+            heapq.heappush(ready.setdefault(t.resource, []),
+                           (order[t.key], t.key))
+
+    free_at: dict[str, float] = {}
+    events: list[tuple[float, int, Hashable]] = []   # (end, order, key)
+    segments: list[Segment] = []
+    now = 0.0
+    done = 0
+
+    def dispatch() -> None:
+        # A resource takes work only when idle, picking the ready task
+        # with the lowest creation order — so an earlier step's next phase
+        # is never queue-jumped by a later step that became ready while
+        # the resource was busy.
+        for res, heap in ready.items():
+            while heap and free_at.get(res, 0.0) <= now:
+                _, key = heapq.heappop(heap)
+                t = by_key[key]
+                end = now + t.duration
+                free_at[res] = end
+                segments.append(Segment(key, res, now, end, t.step, t.label))
+                heapq.heappush(events, (end, order[key], key))
+
+    dispatch()
+    while events:
+        now, _, key = heapq.heappop(events)
+        done += 1
+        for dep_key in dependents.get(key, ()):
+            remaining[dep_key] -= 1
+            if remaining[dep_key] == 0:
+                t = by_key[dep_key]
+                heapq.heappush(ready.setdefault(t.resource, []),
+                               (order[dep_key], dep_key))
+        dispatch()
+    if done != len(tasks):
+        raise ValueError("dependency cycle: not every task could run")
+    makespan = max((s.end for s in segments), default=0.0)
+    steps = max((t.step for t in tasks), default=-1) + 1
+    return Timeline(segments=segments, makespan=makespan, steps=steps)
+
+
+def simulate_steps(
+    phases: Sequence[Phase],
+    topology: Topology,
+    *,
+    compute_s: float,
+    steps: int = 3,
+    backpressure: int = 2,
+) -> Timeline:
+    """Simulate ``steps`` iterations of (compute, comm phases) under the
+    in-flight bound. ``phases`` is ONE step's schedule; every step repeats
+    it. Phase durations are congestion-priced once (the schedule is
+    identical each step) and reused."""
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+    if backpressure < 1:
+        raise ValueError(f"backpressure must be >= 1, got {backpressure}")
+    durations = [
+        topology.phase_time(ph.src, ph.dst, ph.nbytes) for ph in phases
+    ]
+    tasks: list[Task] = []
+    for s in range(steps):
+        deps: list[Hashable] = []
+        if s > 0:
+            deps.append(("compute", s - 1))
+        gate = s - backpressure
+        if gate >= 0:
+            deps.append(("comm_done", gate))
+        tasks.append(Task(
+            key=("compute", s), duration=compute_s, resource=COMPUTE,
+            deps=tuple(deps), step=s, label="compute",
+        ))
+        prev: Hashable = ("compute", s)
+        for p, (ph, dur) in enumerate(zip(phases, durations)):
+            key = ("comm", s, p)
+            tasks.append(Task(
+                key=key, duration=dur, resource=NETWORK, deps=(prev,),
+                step=s, label=ph.label,
+            ))
+            prev = key
+        # Zero-duration completion marker so the backpressure gate has a
+        # single key whether or not the step communicates.
+        tasks.append(Task(
+            key=("comm_done", s), duration=0.0, resource=NETWORK,
+            deps=(prev,), step=s, label="step_done",
+        ))
+    return simulate_tasks(tasks)
+
+
+__all__ = [
+    "COMPUTE",
+    "NETWORK",
+    "Segment",
+    "Task",
+    "Timeline",
+    "simulate_steps",
+    "simulate_tasks",
+]

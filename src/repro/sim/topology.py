@@ -1,0 +1,152 @@
+"""Hierarchical alpha-beta network model built from a :class:`MachineSpec`.
+
+The machine is a level tree: ``spec.shape = (nodes, gpus)`` means every
+node is a switch whose children are GPUs, and the nodes hang off one root
+fabric. A point-to-point message between processors ``src`` and ``dst``
+routes up the tree to their lowest common ancestor and back down; the
+*crossing level* — the outermost coordinate where the two processors
+differ — determines which fabric the message pays for:
+
+  * latency ``alpha[level]`` per message, and
+  * bandwidth ``beta[level]`` (= ``spec.link_bw(level)``) per *port*.
+
+Ports model contention on shared links. A message crossing level ``L``
+leaves through the port of the level-``(L+1)`` subtree containing ``src``
+(for a two-level machine and ``L = 0`` that is the source *node's* NIC,
+shared by every GPU in the node) and enters through the subtree port
+containing ``dst``. Messages in flight at the same time through the same
+port share its bandwidth, so the time of a set of concurrent transfers is
+the max over ports of ``n_msgs * alpha + port_bytes / beta`` — the
+standard congestion (max-load) alpha-beta cost used by static mapping
+cost models.
+
+Everything is vectorized over transfer arrays with NumPy so the simulator
+can price thousands of transfers per event without Python loops.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.machine import MachineSpec
+
+#: Default per-message latencies by level depth, outermost first. The
+#: outermost fabric (DCI / inter-node Ethernet) is ~an order of magnitude
+#: slower to enter than the intra-node links. Both are scaled to the
+#: repo's scaled-down problem sizes (the registry's canonical workloads
+#: move KB..MB faces, not the GB payloads of the paper's full runs) so
+#: the per-message setup term does not drown the byte costs the volume
+#: models price; pass explicit ``alphas`` to ``Topology.from_spec`` for
+#: full-scale latency studies.
+DEFAULT_ALPHA_OUTER = 2e-7      # seconds, inter-node message setup
+DEFAULT_ALPHA_INNER = 5e-8      # seconds, intra-node / on-fabric setup
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """The level tree with per-level (alpha, beta) parameters.
+
+    ``alphas``/``betas`` are outermost-first, one entry per level of
+    ``spec.shape``; ``betas`` defaults to ``spec.level_bws``.
+    """
+
+    spec: MachineSpec
+    alphas: tuple[float, ...]
+    betas: tuple[float, ...]
+
+    @classmethod
+    def from_spec(cls, spec: MachineSpec,
+                  alphas: tuple[float, ...] | None = None) -> "Topology":
+        k = len(spec.shape)
+        if alphas is None:
+            alphas = ((DEFAULT_ALPHA_OUTER,) + (DEFAULT_ALPHA_INNER,) * (k - 1)
+                      if k > 1 else (DEFAULT_ALPHA_INNER,))
+        if len(alphas) != k:
+            raise ValueError(
+                f"alphas needs one latency per level: got {len(alphas)} "
+                f"for {k} levels"
+            )
+        return cls(spec=spec, alphas=tuple(alphas), betas=spec.level_bws)
+
+    # -------------------------------------------------------------- routing
+    @property
+    def nprocs(self) -> int:
+        return self.spec.nprocs
+
+    def coords(self, procs: np.ndarray) -> np.ndarray:
+        """(n, k) level coordinates of flat processor ids (row-major)."""
+        procs = np.asarray(procs, dtype=np.int64)
+        return np.stack(
+            np.unravel_index(procs, self.spec.shape), axis=-1
+        ).reshape(procs.shape + (len(self.spec.shape),))
+
+    def crossing_levels(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+        """Outermost level where src and dst coordinates differ (the fabric
+        the message crosses); ``k`` (= number of levels) for src == dst,
+        i.e. a local copy that never touches the network."""
+        cs, cd = self.coords(np.asarray(src)), self.coords(np.asarray(dst))
+        diff = cs != cd
+        k = diff.shape[-1]
+        # argmax finds the first True; all-False rows (same proc) map to k.
+        first = np.argmax(diff, axis=-1)
+        return np.where(diff.any(axis=-1), first, k)
+
+    def transfer_time(self, nbytes: float, level: int) -> float:
+        """Uncontended point-to-point time for one message at one level."""
+        return self.alphas[level] + float(nbytes) / self.betas[level]
+
+    # ----------------------------------------------------------- congestion
+    def phase_time(self, src: np.ndarray, dst: np.ndarray,
+                   nbytes: np.ndarray) -> float:
+        """Time for a set of concurrent transfers under port contention.
+
+        For each level ``L``, the transfers crossing at ``L`` load the
+        egress port of the subtree ``src[:L+1]`` and the ingress port of
+        ``dst[:L+1]``; the phase completes when the most-loaded port
+        drains: ``max over ports (msgs * alpha[L] + bytes / beta[L])``.
+        Same-processor transfers are free (no network crossing).
+        """
+        src = np.asarray(src, dtype=np.int64).reshape(-1)
+        dst = np.asarray(dst, dtype=np.int64).reshape(-1)
+        nbytes = np.broadcast_to(
+            np.asarray(nbytes, dtype=np.float64), src.shape
+        )
+        if src.size == 0:
+            return 0.0
+        levels = self.crossing_levels(src, dst)
+        k = len(self.spec.shape)
+        worst = 0.0
+        cs, cd = self.coords(src), self.coords(dst)
+        for lvl in range(k):
+            mask = levels == lvl
+            if not mask.any():
+                continue
+            # Port id = flat index of the level-(lvl+1) subtree containing
+            # the endpoint: unique per (coords[0..lvl]) prefix.
+            dims = self.spec.shape[: lvl + 1]
+            sub_s = np.ravel_multi_index(
+                tuple(cs[mask, i] for i in range(lvl + 1)), dims
+            )
+            sub_d = np.ravel_multi_index(
+                tuple(cd[mask, i] for i in range(lvl + 1)), dims
+            )
+            # Full-duplex ports: egress and ingress are separate directions
+            # of the same link, each with the level's bandwidth.
+            nports = int(np.prod(dims))
+            load = np.zeros((2, nports), dtype=np.float64)
+            msgs = np.zeros((2, nports), dtype=np.float64)
+            np.add.at(load[0], sub_s, nbytes[mask])
+            np.add.at(load[1], sub_d, nbytes[mask])
+            np.add.at(msgs[0], sub_s, 1.0)
+            np.add.at(msgs[1], sub_d, 1.0)
+            port_t = msgs * self.alphas[lvl] + load / self.betas[lvl]
+            worst = max(worst, float(port_t.max()))
+        return worst
+
+
+__all__ = [
+    "DEFAULT_ALPHA_INNER",
+    "DEFAULT_ALPHA_OUTER",
+    "Topology",
+]
