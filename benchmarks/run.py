@@ -2,7 +2,7 @@
 
   PYTHONPATH=src python -m benchmarks.run           # everything
   PYTHONPATH=src python -m benchmarks.run --only loc_table
-  PYTHONPATH=src python -m benchmarks.run --only mapper_tuning  # + BENCH_tuning.json
+  PYTHONPATH=src python -m benchmarks.run --only mapper_tuning --only sim_eval
 
 Prints a ``name,us_per_call,derived`` CSV at the end (microbench section)
 plus the per-table reports above it. The ``mapper_tuning`` and
@@ -10,11 +10,22 @@ plus the per-table reports above it. The ``mapper_tuning`` and
 (uploaded as CI artifacts next to ``BENCH_mapping.json``); the
 ``roofline`` and ``perf_iterations`` sections read previously recorded
 dry-run artifacts and skip cleanly when absent.
+
+Every run additionally aggregates the executed sections' results — each
+harness's ``run()`` returns its machine-readable artifact — into one
+top-level ``BENCH_perf.json`` trajectory file (machine info + per-section
+timings + results), so the perf history of whatever ran is recorded per
+PR instead of living only in scattered CI uploads. ``--perf-json ''``
+disables it.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
+import sys
 import time
+from pathlib import Path
 
 from benchmarks import (
     decompose_sweep,
@@ -37,13 +48,38 @@ SECTIONS = {
                         decompose_sweep.run),
     "mapping_eval": ("Mapping IR: vectorized vs per-point grid evaluation",
                      mapping_eval.run),
-    "sim_eval": ("Simulator: time-domain tuning vs the Table 2 volume "
-                 "oracles (+ BENCH_sim.json)", sim_eval.run),
+    "sim_eval": ("Simulator: time-domain tuning, engine parity/speedup, "
+                 "1024-proc scale (+ BENCH_sim.json)", sim_eval.run),
     "roofline": ("Roofline table (from dry-run artifacts)",
                  roofline_report.run),
     "perf_iterations": ("§Perf hillclimb summary (from recorded artifacts)",
                         perf_iterations.run),
 }
+
+PERF_JSON = "BENCH_perf.json"
+
+
+def machine_info() -> dict:
+    import os
+
+    return {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "processor": platform.processor(),
+        "cpu_count": os.cpu_count(),
+    }
+
+
+def write_perf_trajectory(sections: dict, path: str = PERF_JSON,
+                          report=print) -> dict:
+    """Aggregate executed sections into the per-PR perf trajectory file."""
+    payload = {
+        "machine": machine_info(),
+        "sections": sections,
+    }
+    Path(path).write_text(json.dumps(payload, indent=2, default=str) + "\n")
+    report(f"\nwrote {path} ({len(sections)} section(s))")
+    return payload
 
 
 def microbench(report=print) -> list[tuple[str, float, str]]:
@@ -94,22 +130,45 @@ def microbench(report=print) -> list[tuple[str, float, str]]:
     return rows
 
 
-def main() -> None:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--only", default=None, choices=list(SECTIONS))
-    args = ap.parse_args()
-    keys = [args.only] if args.only else list(SECTIONS)
+    ap.add_argument("--only", action="append", default=None,
+                    choices=list(SECTIONS),
+                    help="run only the named section(s); repeatable")
+    ap.add_argument("--perf-json", default=PERF_JSON,
+                    help="aggregate trajectory output path ('' disables)")
+    args = ap.parse_args(argv)
+    keys = args.only if args.only else list(SECTIONS)
+    results: dict = {}
     for key in keys:
         title, fn = SECTIONS[key]
         print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")
+        t0 = time.perf_counter()
         try:
-            fn()
+            result = fn()
         except FileNotFoundError as e:
             print(f"(skipped: {e} — run repro.launch.dryrun first)")
+            results[key] = {"skipped": str(e)}
+            continue
+        results[key] = {
+            "elapsed_s": time.perf_counter() - t0,
+            "result": result,
+        }
     if args.only is None:
         print(f"\n{'=' * 72}\nMicrobenchmarks\n{'=' * 72}")
-        microbench()
+        t0 = time.perf_counter()
+        rows = microbench()
+        results["microbench"] = {
+            "elapsed_s": time.perf_counter() - t0,
+            "result": [
+                {"name": n, "us_per_call": us, "derived": d}
+                for n, us, d in rows
+            ],
+        }
+    if args.perf_json:
+        write_perf_trajectory(results, args.perf_json)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

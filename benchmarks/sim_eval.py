@@ -1,31 +1,39 @@
-"""Simulator evaluation: time-domain tuning vs the Table 2 volume oracles.
+"""Simulator evaluation: time-domain tuning, engine parity, and scale.
 
-For every registry application this harness runs the mapper autotuner
-TWICE — once with the app's analytic volume objective (the PR-3 search)
-and once with the discrete-event simulator as the objective
-(``repro.sim.cost.time_tuned_app``, same tuner, same search space, cost
-in predicted seconds) — and enforces:
+Four lanes, all recorded in ``BENCH_sim.json`` (the CI artifact next to
+``BENCH_mapping.json`` and ``BENCH_tuning.json``):
 
-  * **paper scale** (each app's default 2-node cluster, where the paper's
-    Table 2 pairs live): the simulated-time winner's communication volume
-    matches the Table 2 tuning oracle (<= the hand-tuned volume) for
-    every registry app;
+**Tuning oracle sweep** — for every registry application the mapper
+autotuner runs TWICE, once with the analytic volume objective (the PR-3
+search) and once with the simulator as the objective
+(``repro.sim.cost.time_tuned_app``, same tuner, cost in predicted
+seconds), and enforces:
+
+  * **paper scale**: the simulated-time winner's communication volume
+    matches the Table 2 tuning oracle (<= the hand-tuned volume);
   * **benchmark scale** (``--chips``, default 64): the time winner never
     regresses the oracle's *default* (untuned) volume. Halo apps may
-    legitimately diverge from the *tuned* volume here: the simulator
-    prices the max-port bottleneck, under which equally-NIC-loaded
-    placements tie and fewer messages win, while the volume model counts
-    total (mostly intra-node) traffic — the divergence is reported per
-    app (see docs/simulator.md);
-  * **ranking agreement**: across each app's leaderboard, the fraction of
-    strictly-volume-ordered candidate pairs whose simulated times agree
-    in order (recorded; enforced >= 0.5 registry-wide on the apps with
-    more than one candidate);
-  * **speed budget**: the full double-tuning sweep (every app, both
-    scales, every candidate simulated) completes within 10 s.
+    legitimately diverge from the *tuned* volume here (equally-NIC-loaded
+    placements tie under max-port pricing; see docs/simulator.md);
+  * **ranking agreement** >= 0.5 registry-wide, and a 10 s sweep budget.
 
-Writes ``BENCH_sim.json`` (the CI artifact next to ``BENCH_mapping.json``
-and ``BENCH_tuning.json``). ``--quick`` runs the paper scale only.
+**Engine parity** — the batched analytic-envelope engine
+(``repro.sim.batch``) must agree with the exact event engine
+(``simulate_steps(...).per_step_time()``) to 1e-9 on the paper cluster
+for all nine apps, across default placements and every tuner variant.
+
+**Engine speedup** — the 64-chip registry sweep: every feasible
+(grid, options) point's default placement plus all its tuner variants,
+priced by the batched engine in one grouped ``candidates x phases x
+ports`` pass vs the event engine replaying each candidate. The measured
+speedup must stay above the committed ``SPEEDUP_FLOOR`` (the CI
+perf-regression lane re-checks the recorded value).
+
+**Scale** — ``time_tuned_app`` must complete the full nine-app registry
+at ``--scale-procs`` (default 1024) processors inside ``SCALE_BUDGET_S``.
+
+``--quick`` runs the paper-scale tuning sweep + engine parity only (the
+CI sim-smoke lane).
 
     PYTHONPATH=src python benchmarks/sim_eval.py --json BENCH_sim.json
 """
@@ -41,12 +49,18 @@ from pathlib import Path
 import numpy as np
 
 from repro import apps
+from repro.search.space import build_program
 from repro.search.tuner import tune_app
+from repro.sim.batch import price_stacks
 from repro.sim.cost import time_search_space, time_tuned_app
 
 CHIPS = 64
-TIME_BUDGET_S = 10.0     # acceptance: full-registry simulation budget
+TIME_BUDGET_S = 10.0     # acceptance: tuning-sweep budget (both scales)
 MIN_AGREEMENT = 0.5
+ENGINE_ATOL = 1e-9       # acceptance: batched-vs-event per-step agreement
+SPEEDUP_FLOOR = 10.0     # acceptance: batched >= 10x event on the sweep
+SCALE_PROCS = 1024
+SCALE_BUDGET_S = 60.0    # acceptance: full registry time-tuning at scale
 
 
 def _rank_agreement(report, app) -> float | None:
@@ -56,7 +70,7 @@ def _rank_agreement(report, app) -> float | None:
     for s in report.leaderboard:
         model = app.search_space.cost_model(report.procs, s.candidate.opts)
         try:
-            rows.append((model.cost(s.candidate.grid), s.volume))
+            rows.append((model.cost(s.candidate.grid), s.rank_cost))
         except ValueError:
             continue
     pairs = agree = 0
@@ -76,18 +90,6 @@ def _tune_one(app, chips: int | None) -> dict:
         rep_t.procs, rep_t.best.candidate.opts
     )
     winner_volume = vol_model.cost(rep_t.best.candidate.grid)
-    # The tuner scores each grid at its default placement (Phase 1);
-    # re-simulate the winning candidate's ACTUAL assignment grid so the
-    # reported time corresponds to the placement that won.
-    time_model = time_search_space(app).cost_model(
-        rep_t.procs, rep_t.best.candidate.opts
-    )
-    winner_assign = np.asarray(rep_t.best_program.mapper.assignment_grid(
-        rep_t.best.candidate.grid
-    ))
-    placed_time = time_model.simulate(
-        rep_t.best.candidate.grid, winner_assign
-    ).per_step_time()
     # The volume run's oracle is already feasibility-guarded by tune_app
     # (e.g. summa's square-grid pair at --chips 48 raises ValueError and
     # records None); the time run dropped its oracle (units mismatch).
@@ -98,7 +100,9 @@ def _tune_one(app, chips: int | None) -> dict:
         "procs": rep_t.procs,
         "machine": list(rep_t.machine_shape),
         "sim_winner": rep_t.best.candidate.describe(),
-        "sim_winner_time_s": placed_time,
+        # The tuner batch-prices every surviving variant's ACTUAL
+        # placement (Phase 3), so the winner's time is its placed time.
+        "sim_winner_time_s": rep_t.best.placed_cost,
         "grid_default_time_s": rep_t.best.volume,
         "sim_winner_volume": winner_volume,
         "volume_winner": rep_v.best.candidate.describe(),
@@ -117,7 +121,134 @@ def _tune_one(app, chips: int | None) -> dict:
     }
 
 
+# ------------------------------------------------------------ engine lanes
+def _candidate_sets(app, chips: int | None):
+    """Every feasible (grid, options) point of one app with its default
+    placement + all bijective tuner variants — the registry sweep both
+    engines price."""
+    sp_b = time_search_space(app)
+    sp_e = time_search_space(app, engine="event")
+    n = app.procs(chips)
+    if not app.search_space.grids(n):
+        n = app.default_procs
+    shape = tuple(int(s) for s in app.machine_shape(n))
+    for opts in app.search_space.option_combos():
+        mb = sp_b.cost_model(n, dict(opts))
+        me = sp_e.cost_model(n, dict(opts))
+        for grid in app.search_space.grids(n):
+            try:
+                mb.base.cost(grid)
+            except ValueError:
+                continue
+            cands = [mb._default_assignment(grid)]
+            for c in app.search_space.variants(grid, tuple(opts), shape):
+                prog = build_program(shape, c, "bench")
+                a = prog.mapper.assignment_grid(c.grid, use_cache=False)
+                flat = a.reshape(-1)
+                if flat.size == n and len(np.unique(flat)) == n:
+                    cands.append(np.asarray(a))
+            yield mb, me, grid, np.stack(cands)
+
+
+def engine_parity(report=print) -> dict:
+    """Batched vs event per-step agreement on the paper cluster, all nine
+    apps, every candidate placement."""
+    worst = 0.0
+    n_checked = 0
+    for app in apps.iter_apps():
+        for mb, me, grid, stack in _candidate_sets(app, None):
+            t_batch = mb.price_assignments(grid, stack)
+            t_event = me.price_assignments(grid, stack)
+            worst = max(worst, float(np.abs(t_batch - t_event).max()))
+            n_checked += len(stack)
+    ok = worst <= ENGINE_ATOL
+    report(f"engine parity (paper cluster): {n_checked} placements, "
+           f"max |batch - event| = {worst:.3e} "
+           f"({'OK' if ok else 'FAIL'} @ {ENGINE_ATOL:g})")
+    return {"placements": n_checked, "max_abs_diff_s": worst,
+            "atol": ENGINE_ATOL, "ok": ok}
+
+
+def engine_bench(report=print, chips: int = CHIPS) -> dict:
+    """The 64-chip registry sweep, batched (one grouped pricing pass)
+    vs the event engine replaying each candidate."""
+    stacks, event_work = [], []
+    n_cands = 0
+    for app in apps.iter_apps():
+        for mb, me, grid, stack in _candidate_sets(app, chips):
+            n_cands += len(stack)
+            stacks.append((mb.beam_pricer(grid), stack))
+            event_work.append((me, grid, stack))
+    price_stacks(stacks)        # warm caches shared by both engines
+    t0 = time.perf_counter()
+    batch_res = price_stacks(stacks)
+    t_batch = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    event_res = [
+        [me.simulate(grid, a.reshape(grid)).per_step_time() for a in stack]
+        for me, grid, stack in event_work
+    ]
+    t_event = time.perf_counter() - t0
+    worst = max(
+        float(np.abs(tb - np.asarray(te)).max())
+        for tb, te in zip(batch_res, event_res)
+    )
+    speedup = t_event / t_batch if t_batch > 0 else float("inf")
+    report(f"engine sweep ({chips} chips): {n_cands} placements  "
+           f"event {t_event * 1e3:8.1f}ms  batch {t_batch * 1e3:8.1f}ms  "
+           f"speedup {speedup:6.1f}x (floor {SPEEDUP_FLOOR:.0f}x)  "
+           f"max diff {worst:.2e}")
+    return {
+        "chips": chips,
+        "placements": n_cands,
+        "event_s": t_event,
+        "batch_s": t_batch,
+        "speedup": speedup,
+        "speedup_floor": SPEEDUP_FLOOR,
+        "max_abs_diff_s": worst,
+        "ok": speedup >= SPEEDUP_FLOOR and worst <= ENGINE_ATOL,
+    }
+
+
+def scale_bench(report=print, procs: int = SCALE_PROCS) -> dict:
+    """time_tuned_app over the full registry at scale, against the
+    CI-enforced wall-clock budget."""
+    rows = []
+    t0 = time.perf_counter()
+    for app in apps.iter_apps():
+        t1 = time.perf_counter()
+        rep = tune_app(time_tuned_app(app), procs)
+        rows.append({
+            "app": app.name,
+            "procs": rep.procs,
+            "winner": rep.best.candidate.describe(),
+            "winner_time_s": rep.best.placed_cost,
+            "candidates": rep.candidates_considered,
+            "variants": rep.variants_evaluated,
+            "verified": rep.verified,
+            "elapsed_s": time.perf_counter() - t1,
+        })
+    elapsed = time.perf_counter() - t0
+    report(f"\ntime-domain tuning at {procs} procs "
+           f"({elapsed:.2f}s, budget {SCALE_BUDGET_S:.0f}s):")
+    report(f"{'app':10s} {'procs':>6s} {'winner':28s} {'time_s':>10s} "
+           f"{'cands':>6s} {'elapsed':>8s}")
+    for r in rows:
+        report(f"{r['app']:10s} {r['procs']:6d} {r['winner']:28s} "
+               f"{r['winner_time_s']:10.3e} {r['candidates']:6d} "
+               f"{r['elapsed_s']:7.2f}s")
+    return {
+        "procs": procs,
+        "apps": rows,
+        "elapsed_s": elapsed,
+        "budget_s": SCALE_BUDGET_S,
+        "within_budget": elapsed < SCALE_BUDGET_S,
+        "all_verified": all(r["verified"] for r in rows),
+    }
+
+
 def run(report=print, chips: int = CHIPS, quick: bool = False,
+        scale_procs: int = SCALE_PROCS,
         json_path: str | None = "BENCH_sim.json") -> dict:
     t0 = time.perf_counter()
     paper_rows, scaled_rows = [], []
@@ -148,7 +279,11 @@ def run(report=print, chips: int = CHIPS, quick: bool = False,
     table(paper_rows, "paper scale (Table 2 clusters)")
     if scaled_rows:
         table(scaled_rows, f"benchmark scale ({chips} chips)")
-    report(f"\nfull sweep: {elapsed:.2f}s (budget {TIME_BUDGET_S:.0f}s)")
+    report(f"\ntuning sweep: {elapsed:.2f}s (budget {TIME_BUDGET_S:.0f}s)")
+
+    parity = engine_parity(report)
+    engines = None if quick else engine_bench(report, chips)
+    scale = None if quick else scale_bench(report, scale_procs)
 
     agreements = [
         r["rank_agreement"] for r in paper_rows + scaled_rows
@@ -174,6 +309,9 @@ def run(report=print, chips: int = CHIPS, quick: bool = False,
         "mean_rank_agreement": (
             sum(agreements) / len(agreements) if agreements else None
         ),
+        "engine_parity": parity,
+        "engine_bench": engines,
+        "scale_bench": scale,
     }
     if json_path:
         Path(json_path).write_text(json.dumps(result, indent=2) + "\n")
@@ -181,36 +319,63 @@ def run(report=print, chips: int = CHIPS, quick: bool = False,
     return result
 
 
+def check(result: dict) -> list[str]:
+    """Acceptance gates over a run's (or a loaded BENCH_sim.json's)
+    result — shared by main() and the CI perf-regression lane."""
+    errors = []
+    if not result["all_match_tuned_oracle"]:
+        errors.append("a simulated-time winner missed the Table 2 tuning "
+                      "oracle at paper scale")
+    if result["any_default_regression"]:
+        errors.append("a simulated-time winner regressed the untuned "
+                      "default volume")
+    if result["mean_rank_agreement"] is not None \
+            and result["mean_rank_agreement"] < MIN_AGREEMENT:
+        errors.append(f"sim-vs-volume ranking agreement "
+                      f"{result['mean_rank_agreement']:.2f} < {MIN_AGREEMENT}")
+    if not result["within_budget"]:
+        errors.append(f"tuning sweep took {result['elapsed_s']:.2f}s "
+                      f"(budget {result['time_budget_s']:.0f}s)")
+    if not result["engine_parity"]["ok"]:
+        errors.append(f"batched engine diverged from the event engine by "
+                      f"{result['engine_parity']['max_abs_diff_s']:.3e}s "
+                      f"(> {ENGINE_ATOL:g})")
+    eng = result.get("engine_bench")
+    if eng is not None and eng["speedup"] < eng["speedup_floor"]:
+        errors.append(f"batched-engine speedup {eng['speedup']:.1f}x fell "
+                      f"below the committed {eng['speedup_floor']:.0f}x floor")
+    if eng is not None and eng["max_abs_diff_s"] > ENGINE_ATOL:
+        errors.append(f"engine sweep diverged by "
+                      f"{eng['max_abs_diff_s']:.3e}s (> {ENGINE_ATOL:g})")
+    scale = result.get("scale_bench")
+    if scale is not None and not scale["within_budget"]:
+        errors.append(f"registry tuning at {scale['procs']} procs took "
+                      f"{scale['elapsed_s']:.2f}s "
+                      f"(budget {scale['budget_s']:.0f}s)")
+    if scale is not None and not scale["all_verified"]:
+        errors.append(f"a {scale['procs']}-proc winner failed DSL "
+                      f"verification")
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--chips", type=int, default=CHIPS)
+    ap.add_argument("--scale-procs", type=int, default=SCALE_PROCS,
+                    help="processor count for the scale lane")
     ap.add_argument("--quick", action="store_true",
-                    help="paper scale only (the CI sim-smoke lane)")
+                    help="paper-scale tuning + engine parity only "
+                         "(the CI sim-smoke lane)")
     ap.add_argument("--json", default="BENCH_sim.json",
                     help="output path for the machine-readable results")
     args = ap.parse_args(argv)
 
-    result = run(chips=args.chips, quick=args.quick, json_path=args.json)
-    ok = True
-    if not result["all_match_tuned_oracle"]:
-        print("ERROR: a simulated-time winner missed the Table 2 tuning "
-              "oracle at paper scale", file=sys.stderr)
-        ok = False
-    if result["any_default_regression"]:
-        print("ERROR: a simulated-time winner regressed the untuned "
-              "default volume", file=sys.stderr)
-        ok = False
-    if result["mean_rank_agreement"] is not None \
-            and result["mean_rank_agreement"] < MIN_AGREEMENT:
-        print(f"ERROR: sim-vs-volume ranking agreement "
-              f"{result['mean_rank_agreement']:.2f} < {MIN_AGREEMENT}",
-              file=sys.stderr)
-        ok = False
-    if not result["within_budget"]:
-        print(f"ERROR: simulation sweep took {result['elapsed_s']:.2f}s "
-              f"(budget {TIME_BUDGET_S:.0f}s)", file=sys.stderr)
-        ok = False
-    return 0 if ok else 1
+    result = run(chips=args.chips, quick=args.quick,
+                 scale_procs=args.scale_procs, json_path=args.json)
+    errors = check(result)
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    return 1 if errors else 0
 
 
 if __name__ == "__main__":

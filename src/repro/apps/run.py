@@ -20,7 +20,12 @@ set XLA_FLAGS before JAX initializes, so use it from a fresh process).
 app's declared search space: candidates are scored with the app's cost
 model, beam-pruned, evaluated through the vectorized batch path, and the
 winning Mapple program + candidate leaderboard are printed. The legacy
-hand-tuned volume pair is checked as a regression oracle.
+hand-tuned volume pair is checked as a regression oracle. ``--tune
+--time`` swaps the objective for the batched discrete-event simulator
+(predicted seconds per step, every beam placement batch-priced) — fast
+enough to search the registry at 1024+ processors:
+
+    PYTHONPATH=src python -m repro.apps.run --all --tune --time --procs 1024
 
 ``--simulate`` runs each selected app's mapped step through the
 discrete-event simulator (``repro.sim``): the plan's device permutation
@@ -95,8 +100,14 @@ def _finish(procs: int | None, json_rows: list, failures: list[str],
 
 
 def tune(selection, procs: int | None, report=print,
-         json_path: str | None = None) -> int:
-    """Run the autotuner over the selected apps; nonzero on any failure."""
+         json_path: str | None = None, time_domain: bool = False) -> int:
+    """Run the autotuner over the selected apps; nonzero on any failure.
+
+    ``time_domain`` swaps each app's volume objective for the batched
+    simulator (``repro.sim.cost.time_tuned_app``): candidates are scored
+    in predicted seconds and every surviving beam variant's actual
+    placement is batch-priced (the ``placed_s`` leaderboard column).
+    """
     import time
 
     from repro.search.tuner import report_lines, tune_app
@@ -109,6 +120,14 @@ def tune(selection, procs: int | None, report=print,
         if app.search_space is None:
             report(f"[{app.name}] no search space declared; skipping")
             continue
+        if time_domain:
+            if getattr(app, "collective", None) is None:
+                report(f"[{app.name}] no collective pattern declared; "
+                       f"skipping")
+                continue
+            from repro.sim.cost import time_tuned_app
+
+            app = time_tuned_app(app)
         rep = tune_app(app, procs)
         tuned += 1
         for line in report_lines(rep):
@@ -231,6 +250,10 @@ def main(argv=None) -> int:
     ap.add_argument("--tune", action="store_true",
                     help="run the mapper autotuner over each app's search "
                          "space and print the winning program + leaderboard")
+    ap.add_argument("--time", action="store_true",
+                    help="with --tune: search on batched-simulator seconds "
+                         "instead of communication volume (placements are "
+                         "batch-priced; works at 1024+ procs)")
     ap.add_argument("--simulate", action="store_true",
                     help="run each app's mapped step through the "
                          "discrete-event simulator and print the timeline")
@@ -246,6 +269,8 @@ def main(argv=None) -> int:
     if args.tune and (args.execute or args.show_ir or args.simulate):
         ap.error("--tune is a separate mode; run it without "
                  "--execute/--show-ir/--simulate")
+    if args.time and not args.tune:
+        ap.error("--time requires --tune")
     if args.simulate and (args.execute or args.show_ir):
         ap.error("--simulate is a separate mode; run it without "
                  "--execute/--show-ir")
@@ -283,7 +308,8 @@ def main(argv=None) -> int:
         ap.error("pass --app NAME, --all, or --list")
 
     if args.tune:
-        return tune(selection, args.procs, json_path=args.json)
+        return tune(selection, args.procs, json_path=args.json,
+                    time_domain=args.time)
     if args.simulate:
         return simulate(selection, args.procs, json_path=args.json)
 

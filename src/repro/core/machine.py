@@ -82,6 +82,19 @@ class MachineSpec:
         return out
 
     @property
+    def level_strides(self) -> tuple[int, ...]:
+        """Row-major flat-id stride per level, outermost first: dividing a
+        flat processor id by ``level_strides[L]`` yields the flat index of
+        the level-(L+1) subtree containing it — the port id the simulator
+        charges for a level-L crossing."""
+        strides = []
+        acc = 1
+        for extent in reversed(self.shape):
+            strides.append(acc)
+            acc *= extent
+        return tuple(reversed(strides))
+
+    @property
     def level_bws(self) -> tuple[float, ...]:
         """Per-level port bandwidth, outermost first (always full-rank)."""
         if self.link_bws is not None:

@@ -11,10 +11,16 @@ experiment with an actual search loop:
   3. expand the beam into distribution x order variants, materialize each
      as a mapping-IR program, and evaluate it through the vectorized
      ``Mapper.assignment_grid`` batch path (bijectivity + cross-node
-     locality of nearest-neighbour hops);
-  4. rank by (volume, cross-node fraction) and render the winner back to
-     Mapple DSL source, verifying the parsed source reproduces the
-     winning permutation bit-for-bit.
+     locality of nearest-neighbour hops), deduping placements that are
+     isomorphic under per-level processor relabeling
+     (``sim.batch.canonical_assignment`` — identical port loads can
+     never rank differently); when the cost model is time-domain (it
+     exposes ``price_assignments``), the surviving beam's *actual*
+     placements are priced in one batched simulator call;
+  4. rank by (placed seconds when simulated, else volume; then
+     cross-node fraction) and render the winner back to Mapple DSL
+     source, verifying the parsed source reproduces the winning
+     permutation bit-for-bit.
 
 The app's legacy ``tuning`` pair is treated as a *regression oracle*: the
 tuner must rediscover (or beat) the hand-tuned volume; tests and the
@@ -30,6 +36,7 @@ import numpy as np
 
 from repro.core import dsl
 from repro.core.machine import GPU, Machine
+from repro.sim.batch import canonical_assignment, price_stacks
 from repro.search.space import (
     Candidate,
     CandidateProgram,
@@ -53,6 +60,16 @@ class ScoredCandidate:
     bijective: bool | None = None
     cross_node: float | None = None
     eval_path: str | None = None       # "vectorized" | "per-point"
+    # Time-domain tuning only: the batched simulator's predicted seconds
+    # for this variant's ACTUAL placement (Phase 1's `volume` slot holds
+    # the grid's default-placement score).
+    placed_cost: float | None = None
+
+    @property
+    def rank_cost(self) -> float:
+        """What this candidate is ranked by: placed simulated seconds
+        when the beam was batch-priced, the analytic score otherwise."""
+        return self.volume if self.placed_cost is None else self.placed_cost
 
     def row(self) -> dict:
         return {
@@ -63,6 +80,7 @@ class ScoredCandidate:
             "bijective": self.bijective,
             "cross_node": self.cross_node,
             "eval_path": self.eval_path,
+            "placed_cost": self.placed_cost,
         }
 
 
@@ -169,32 +187,72 @@ def tune_app(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
 
     # Phase 3: variant expansion + vectorized batch evaluation.
     evaluated: list[ScoredCandidate] = []
-    seen: set[tuple] = set()
+    seen: dict[tuple, ScoredCandidate] = {}
+    # (batch engine, assignment stack, entries) groups, priced in one
+    # registry-wide congestion pass after the beam is fully expanded.
+    beam_groups: list[tuple[object, np.ndarray, list[ScoredCandidate]]] = []
     for volume, grid, options in shortlist:
+        survivors: list[tuple[ScoredCandidate, np.ndarray]] = []
         for cand in space.variants(grid, options, machine_shape):
             program = build_program(machine_shape, cand, f"{app.name}_cand")
             assign = program.mapper.assignment_grid(cand.grid, use_cache=False)
-            # Dedupe only same-(grid, options) degenerate dist/order
-            # variants; distinct option points stay on the leaderboard even
-            # when their permutations coincide (their volumes differ).
-            key = (cand.grid, cand.options, assign.tobytes())
-            if key in seen:       # degenerate variant: identical permutation
+            # Dedupe same-(grid, options) variants whose placements are
+            # isomorphic under per-level processor relabeling — identical
+            # port loads, so identical volume, time and locality; distinct
+            # option points stay on the leaderboard even when their
+            # permutations coincide (their volumes differ).
+            key = (cand.grid, cand.options,
+                   canonical_assignment(assign, machine_shape).tobytes())
+            twin = seen.get(key)
+            if twin is not None:  # isomorphic variant already evaluated
+                # Isomorphs tie on every ranking key, so keep the
+                # describe()-minimal one as the class representative —
+                # the winner the pre-dedup sort would have picked,
+                # independent of enumeration order.
+                if cand.describe() < twin.candidate.describe():
+                    twin.candidate = cand
                 continue
-            seen.add(key)
             flat = assign.reshape(-1)
             bijective = flat.size == n and len(np.unique(flat)) == n
             node_grid = assign // machine_shape[1]
-            evaluated.append(ScoredCandidate(
+            entry = ScoredCandidate(
                 candidate=cand,
                 volume=volume,
                 evaluated=True,
                 bijective=bijective,
                 cross_node=cross_node_fraction(node_grid),
                 eval_path=program.mapper.last_eval_path,
-            ))
+            )
+            seen[key] = entry
+            evaluated.append(entry)
+            if bijective:
+                survivors.append((entry, np.asarray(assign)))
+        # Time-domain models price the surviving beam's ACTUAL placements
+        # through the batch engine; volume models keep ranking variants by
+        # locality alone.
+        if not survivors:
+            continue
+        model = space.cost_model(n, dict(options))
+        engine = getattr(model, "beam_pricer", lambda g: None)(grid)
+        stack = np.stack([a for _, a in survivors])
+        entries = [e for e, _ in survivors]
+        if engine is not None:
+            beam_groups.append((engine, stack, entries))
+        elif hasattr(model, "price_assignments"):
+            # Per-group fallback (e.g. the exact event engine).
+            for entry, t in zip(entries,
+                                model.price_assignments(grid, stack)):
+                entry.placed_cost = float(t)
+    if beam_groups:
+        # All shortlisted grids x options in one candidates x phases x
+        # ports pricing sweep.
+        priced = price_stacks([(e, s) for e, s, _ in beam_groups])
+        for (_, _, entries), times in zip(beam_groups, priced):
+            for entry, t in zip(entries, times):
+                entry.placed_cost = float(t)
     ranked = sorted(
         (s for s in evaluated if s.bijective),
-        key=lambda s: (s.volume, s.cross_node, s.candidate.describe()),
+        key=lambda s: (s.rank_cost, s.cross_node, s.candidate.describe()),
     )
     if not ranked:
         raise ValueError(
@@ -278,13 +336,20 @@ def report_lines(report: TuningReport) -> list[str]:
         f"({report.elapsed_s * 1e3:.1f} ms)"
         + (f"  {report.note}" if report.note else "")
     ]
+    timed = any(s.placed_cost is not None for s in report.leaderboard)
+    placed_hdr = f" {'placed_s':>10s}" if timed else ""
     lines.append(
-        f"  {'candidate':32s} {'volume':>12s} {'xnode':>6s} {'bij':>4s}"
+        f"  {'candidate':32s} {'volume':>12s}{placed_hdr} "
+        f"{'xnode':>6s} {'bij':>4s}"
     )
     for s in report.leaderboard:
         xnode = f"{s.cross_node:6.2f}" if s.cross_node is not None else "     -"
+        placed = ""
+        if timed:
+            placed = (f" {s.placed_cost:10.3e}" if s.placed_cost is not None
+                      else f" {'-':>10s}")
         lines.append(
-            f"  {s.candidate.describe():32s} {s.volume:12.4g} {xnode} "
+            f"  {s.candidate.describe():32s} {s.volume:12.4g}{placed} {xnode} "
             f"{str(bool(s.bijective)):>4s}"
         )
     if report.default is not None:

@@ -3,18 +3,29 @@
 Predicts per-step wall-clock time for a mapped application:
 
   ``topology``     hierarchical alpha-beta network from a MachineSpec
-                   (per-level latency/bandwidth, port contention)
+                   (per-level latency/bandwidth, port contention; all-
+                   pairs LCA matrix + bucketed vectorized pricing)
   ``collectives``  wire schedules for the patterns the nine apps emit,
                    derived from the exact tile->processor assignment
+                   (packed tile-space tensors, memoized expansion)
   ``engine``       event-queue execution of compute segments overlapped
                    with comm streams, Backpressure = in-flight depth
+  ``batch``        analytic-envelope engine pricing whole candidate
+                   beams in one candidates x phases x ports pass
   ``cost``         SimulatedTimeCostModel: the simulator behind the
                    CostModel protocol, so the tuner optimizes seconds
 
 See docs/simulator.md. ``machine.modeled_step_time`` remains the
 documented flat-topology fast path.
 """
-from repro.sim.collectives import CollectivePattern, Phase, build_phases
+from repro.sim.batch import BatchSimulator, batch_simulator, canonical_assignment
+from repro.sim.collectives import (
+    CollectivePattern,
+    PackedSchedule,
+    Phase,
+    build_phases,
+    packed_schedule,
+)
 from repro.sim.cost import (
     SimReport,
     SimulatedTimeCostModel,
@@ -27,13 +38,18 @@ from repro.sim.engine import Timeline, simulate_steps, simulate_tasks
 from repro.sim.topology import Topology
 
 __all__ = [
+    "BatchSimulator",
     "CollectivePattern",
+    "PackedSchedule",
     "Phase",
     "SimReport",
     "SimulatedTimeCostModel",
     "Timeline",
     "Topology",
+    "batch_simulator",
     "build_phases",
+    "canonical_assignment",
+    "packed_schedule",
     "simulate_app",
     "simulate_steps",
     "simulate_tasks",

@@ -1,0 +1,277 @@
+"""Batched analytic-envelope engine: price whole candidate beams at once.
+
+The event engine (``repro.sim.engine``) replays one placement's step
+loop task by task — exact, but a Python heap walk per candidate. For
+*search* the repeated structure is enormous: every candidate of a tuner
+beam shares the same tile-space schedule (``PackedSchedule``), the same
+compute leg, and the same steady-state step recurrence; only the
+tile->processor assignment (and hence the congestion prices) changes.
+
+:class:`BatchSimulator` exploits that. It prices a stack of candidate
+assignments in one vectorized ``candidates x phases x ports`` pass
+(``Topology.bucket_times``) and collapses the step recurrence to its
+closed form. For a constant per-step schedule the event queue's
+steady-state marginal step time is exactly
+
+  * ``compute + comm``        when ``backpressure == 1`` (or a single
+    step): compute, its phases, then the gate — fully serial;
+  * ``max(compute, comm)``    when ``backpressure >= 2``: the serial
+    network stream pipelines one step behind the compute stream, so the
+    slower resource sets the cadence
+
+with ``comm`` the chained sum of that step's phase durations. Both legs
+reproduce ``Timeline.per_step_time()`` to float rounding —
+``benchmarks/sim_eval.py`` and ``tests/test_sim.py`` hold the two
+engines to 1e-9 agreement across the registry — while the event engine
+stays the exact reference for ``--simulate`` timelines, warmup
+transients, and ``Backpressure`` in-flight depth accounting.
+
+:func:`canonical_assignment` is the symmetry companion: congestion
+pricing is invariant under relabeling subtrees within a machine level
+(every port of a level shares one bandwidth), so placements that agree
+up to node / within-node processor renaming are *isomorphic* — the
+tuner dedups them before pricing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.machine import MachineSpec
+from repro.sim.collectives import (
+    CollectivePattern,
+    PackedSchedule,
+    packed_schedule,
+)
+from repro.sim.topology import Topology
+
+#: Cap on ``candidates_per_chunk * transfers`` for one gather/pricing
+#: pass, bounding peak memory of the (chunk, T) endpoint arrays.
+_MAX_GATHER_ELEMS = 1 << 24
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSimulator:
+    """Analytic-envelope pricing of many placements of one schedule.
+
+    ``assignments`` arguments accept shape ``(N, *grid)`` or
+    ``(N, prod(grid))`` stacks of **bijective** tile->processor
+    placements (the tuner filters bijectivity before pricing; local
+    transfers were already dropped in tile space).
+    """
+
+    topology: Topology
+    schedule: PackedSchedule
+    compute_s: float
+    backpressure: int = 2
+    steps: int = 3
+
+    def __post_init__(self) -> None:
+        if self.steps < 1:
+            raise ValueError(f"steps must be >= 1, got {self.steps}")
+        if self.backpressure < 1:
+            raise ValueError(
+                f"backpressure must be >= 1, got {self.backpressure}"
+            )
+
+    # ---------------------------------------------------------------- pricing
+    def _flat_assignments(self, assignments: np.ndarray) -> np.ndarray:
+        a = np.asarray(assignments, dtype=np.int64)
+        ntiles = int(np.prod(self.schedule.grid))
+        if a.ndim == len(self.schedule.grid) + 1 \
+                and a.shape[1:] == self.schedule.grid:
+            a = a.reshape(a.shape[0], ntiles)
+        if a.ndim != 2 or a.shape[1] != ntiles:
+            raise ValueError(
+                f"assignments shape {np.asarray(assignments).shape} does not "
+                f"stack placements of tile grid {self.schedule.grid}"
+            )
+        return a
+
+    def phase_durations(self, assignments: np.ndarray) -> np.ndarray:
+        """(N, n_phases) congestion-priced phase times, all candidates in
+        one bucketed pass. Only the schedule's *unique* transfer slabs are
+        priced (repeated rounds broadcast back over ``phase_map``), and
+        candidates are chunked to bound the gather footprint."""
+        a = self._flat_assignments(assignments)
+        n, sched = a.shape[0], self.schedule
+        u, t = sched.n_unique, sched.n_transfers
+        if t == 0 or n == 0 or sched.n_phases == 0:
+            return np.zeros((n, sched.n_phases), dtype=np.float64)
+        slab_times = np.zeros((n, u), dtype=np.float64)
+        chunk = max(1, _MAX_GATHER_ELEMS // t)
+        for lo in range(0, n, chunk):
+            sub = a[lo:lo + chunk]
+            m = sub.shape[0]
+            src = sub[:, sched.src]
+            dst = sub[:, sched.dst]
+            nbytes = np.broadcast_to(sched.nbytes, (m, t))
+            bucket = (np.arange(m, dtype=np.int64)[:, None] * u
+                      + sched.phase_id[None, :])
+            slab_times[lo:lo + m] = self.topology.bucket_times(
+                src, dst, nbytes, bucket, m * u,
+            ).reshape(m, u)
+        return slab_times[:, sched.phase_map]
+
+    def _close_steps(self, durations: np.ndarray) -> np.ndarray:
+        """(N, n_phases) phase durations -> (N,) steady-state step times:
+        the closed form of ``simulate_steps(...).per_step_time()`` for a
+        constant schedule (cumsum matches the event engine's sequential
+        accumulation on the serial network stream)."""
+        if durations.shape[1] == 0:
+            comm = np.zeros(durations.shape[0], dtype=np.float64)
+        else:
+            comm = np.cumsum(durations, axis=1)[:, -1]
+        if self.steps == 1 or self.backpressure == 1:
+            return self.compute_s + comm
+        return np.maximum(self.compute_s, comm)
+
+    def step_times(self, assignments: np.ndarray) -> np.ndarray:
+        """(N,) steady-state seconds per step — the closed form of
+        ``simulate_steps(...).per_step_time()`` for a constant schedule."""
+        return self._close_steps(self.phase_durations(assignments))
+
+    def step_time(self, assignment: np.ndarray) -> float:
+        """Seconds per step of a single placement."""
+        return float(self.step_times(
+            np.asarray(assignment, dtype=np.int64).reshape(1, -1))[0])
+
+
+def price_stacks(stacks: Sequence[tuple["BatchSimulator", np.ndarray]]
+                 ) -> list[np.ndarray]:
+    """Step times for several (engine, assignment-stack) groups in as few
+    congestion passes as possible.
+
+    The bucket axis of :meth:`Topology.bucket_times` does not care that
+    different buckets came from different schedules, so a whole tuner
+    beam — every shortlisted grid's surviving variants, across option
+    points — prices in one ``candidates x phases x ports`` sweep as long
+    as the groups share a topology. Groups are greedily packed into
+    passes bounded by the gather ceiling; an oversized single group falls
+    back to its own (internally chunked) :meth:`BatchSimulator.step_times`.
+    """
+    out: list[np.ndarray | None] = [None] * len(stacks)
+    runs: list[list[int]] = []
+    run: list[int] = []
+    run_elems = 0
+    for i, (engine, assigns) in enumerate(stacks):
+        a = engine._flat_assignments(assigns)
+        elems = a.shape[0] * max(engine.schedule.n_transfers, 1)
+        same_topo = (not run
+                     or stacks[run[0]][0].topology == engine.topology)
+        if run and (run_elems + elems > _MAX_GATHER_ELEMS or not same_topo):
+            runs.append(run)
+            run, run_elems = [], 0
+        if elems > _MAX_GATHER_ELEMS:
+            out[i] = engine.step_times(assigns)
+            continue
+        run.append(i)
+        run_elems += elems
+    if run:
+        runs.append(run)
+    for run in runs:
+        if len(run) == 1:
+            i = run[0]
+            out[i] = stacks[i][0].step_times(stacks[i][1])
+            continue
+        topo = stacks[run[0]][0].topology
+        srcs, dsts, nbytes, buckets = [], [], [], []
+        offsets = []
+        total_buckets = 0
+        for i in run:
+            engine, assigns = stacks[i]
+            a = engine._flat_assignments(assigns)
+            m, sched = a.shape[0], engine.schedule
+            u, t = sched.n_unique, sched.n_transfers
+            offsets.append((i, total_buckets, m, u))
+            if t:
+                srcs.append(a[:, sched.src].reshape(-1))
+                dsts.append(a[:, sched.dst].reshape(-1))
+                nbytes.append(np.broadcast_to(
+                    sched.nbytes, (m, t)).reshape(-1))
+                buckets.append(
+                    (total_buckets
+                     + np.arange(m, dtype=np.int64)[:, None] * u
+                     + sched.phase_id[None, :]).reshape(-1))
+            total_buckets += m * u
+        times = topo.bucket_times(
+            np.concatenate(srcs) if srcs else np.empty(0, np.int64),
+            np.concatenate(dsts) if dsts else np.empty(0, np.int64),
+            np.concatenate(nbytes) if nbytes else np.empty(0, np.float64),
+            np.concatenate(buckets) if buckets else np.empty(0, np.int64),
+            total_buckets,
+        )
+        for i, off, m, u in offsets:
+            engine = stacks[i][0]
+            durations = times[off:off + m * u].reshape(m, u)[
+                :, engine.schedule.phase_map]
+            out[i] = engine._close_steps(durations)
+    return [np.asarray(o) for o in out]
+
+
+def batch_simulator(pattern: CollectivePattern, spec: MachineSpec,
+                    grid: Sequence[int], *, step_flops: float,
+                    elem_bytes: int = 4, backpressure: int = 2,
+                    steps: int = 3,
+                    alphas: tuple[float, ...] | None = None
+                    ) -> BatchSimulator:
+    """Build the batch engine for one (pattern, machine, grid) point:
+    memoized packed schedule + topology + the app's compute leg."""
+    grid = tuple(int(g) for g in grid)
+    return BatchSimulator(
+        topology=Topology.from_spec(spec, alphas=alphas),
+        schedule=packed_schedule(pattern, grid, elem_bytes=elem_bytes),
+        compute_s=float(step_flops) / (spec.nprocs * spec.peak_flops),
+        backpressure=backpressure,
+        steps=steps,
+    )
+
+
+# ------------------------------------------------------------------ symmetry
+def canonical_assignment(assignment: np.ndarray,
+                         machine_shape: Sequence[int]) -> np.ndarray:
+    """The representative of a placement's isomorphism class under
+    per-level processor relabeling.
+
+    Nodes are renumbered in order of first appearance (row-major over the
+    tile grid), then processors within each node likewise. Two placements
+    with equal canonical forms put identical byte loads on every port of
+    the level tree — crossing levels depend only on the *equality
+    pattern* of coordinates and each level's ports share one bandwidth —
+    so their simulated times and cross-node fractions coincide and the
+    tuner prices one representative.
+    """
+    nodes, gpus = (int(s) for s in machine_shape)
+    flat = np.asarray(assignment, dtype=np.int64).reshape(-1)
+    node, gpu = flat // gpus, flat % gpus
+    new_node = _appearance_rank(node)
+    # Within-node relabeling: rank each (node, gpu) pair by its first
+    # appearance among the pairs of the same (relabeled) node.
+    pair = new_node * gpus + gpu
+    uniq, first = np.unique(pair, return_index=True)
+    seg_node = uniq // gpus
+    order = np.lexsort((first, seg_node))
+    seg_start = np.r_[0, np.flatnonzero(np.diff(seg_node[order])) + 1]
+    sizes = np.diff(np.r_[seg_start, uniq.size])
+    pos = np.arange(uniq.size) - np.repeat(seg_start, sizes)
+    new_gpu_of_uniq = np.empty(uniq.size, dtype=np.int64)
+    new_gpu_of_uniq[order] = pos
+    new_gpu = new_gpu_of_uniq[np.searchsorted(uniq, pair)]
+    return (new_node * gpus + new_gpu).reshape(np.asarray(assignment).shape)
+
+
+def _appearance_rank(values: np.ndarray) -> np.ndarray:
+    """Relabel integer values by order of first appearance."""
+    uniq, first = np.unique(values, return_index=True)
+    ranks = np.empty(uniq.size, dtype=np.int64)
+    ranks[np.argsort(first)] = np.arange(uniq.size)
+    return ranks[np.searchsorted(uniq, values)]
+
+
+__all__ = [
+    "BatchSimulator",
+    "batch_simulator",
+    "canonical_assignment",
+]

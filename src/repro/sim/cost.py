@@ -13,10 +13,14 @@ Two entry points:
     seconds per step instead of element counts, so the mapper autotuner
     (``repro.search.tuner``) optimizes simulated time **unchanged**:
     :func:`time_tuned_app` wraps an Application so ``tune_app`` searches
-    on seconds. Volume models stay the validity filter (a grid the
-    volume model rejects is never simulated), and
-    ``benchmarks/sim_eval.py`` asserts registry-wide that time-optimal
-    winners never regress the Table 2 volume oracles.
+    on seconds. Scoring runs on the batched analytic-envelope engine
+    (``repro.sim.batch``, 1e-9-validated against the event queue;
+    ``engine="event"`` pins a model to the exact reference), the tuner's
+    beam placements price in one grouped pass via :meth:`beam_pricer`,
+    volume models stay the validity filter (a grid the volume model
+    rejects is never simulated), and ``benchmarks/sim_eval.py`` asserts
+    registry-wide that time-optimal winners never regress the Table 2
+    volume oracles.
 """
 from __future__ import annotations
 
@@ -27,6 +31,7 @@ import numpy as np
 
 from repro.core.commvolume import CostModel
 from repro.core.machine import GPU, MachineSpec
+from repro.sim.batch import BatchSimulator, batch_simulator
 from repro.sim.collectives import CollectivePattern, Phase, build_phases
 from repro.sim.engine import Timeline, simulate_steps
 from repro.sim.topology import Topology
@@ -151,9 +156,16 @@ class SimulatedTimeCostModel(CostModel):
     elem_bytes: int = DEFAULT_ELEM_BYTES
     steps: int = DEFAULT_STEPS
     backpressure: int = 2
+    engine: str = "batched"     # "batched" envelope | "event" exact queue
     name = "simulated_time"
 
-    def cost(self, factors: Sequence[int]) -> float:
+    def __post_init__(self) -> None:
+        if self.engine not in ("batched", "event"):
+            raise ValueError(
+                f"engine must be 'batched' or 'event', got {self.engine!r}"
+            )
+
+    def _validate(self, factors: Sequence[int]) -> tuple[int, ...]:
         grid = tuple(int(f) for f in factors)
         if self.base is not None:
             self.base.cost(grid)        # validity: propagate ValueError
@@ -161,16 +173,60 @@ class SimulatedTimeCostModel(CostModel):
             raise ValueError(
                 f"grid {grid} does not cover {self.spec.nprocs} processors"
             )
+        return grid
+
+    def _default_assignment(self, grid: tuple[int, ...]) -> np.ndarray:
         if self.assignment_fn is not None:
-            assign = np.asarray(self.assignment_fn(grid))
-        else:
-            assign = default_assignment(
-                self.spec.shape, grid,
-                self.pattern.params.get("local_axes", ()),
-            )
-        return self.simulate(grid, assign).per_step_time()
+            return np.asarray(self.assignment_fn(grid))
+        return default_assignment(
+            self.spec.shape, grid,
+            self.pattern.params.get("local_axes", ()),
+        )
+
+    def cost(self, factors: Sequence[int]) -> float:
+        grid = self._validate(factors)
+        assign = self._default_assignment(grid)
+        if self.engine == "event":
+            return self.simulate(grid, assign).per_step_time()
+        return self.batch(grid).step_time(assign)
+
+    def batch(self, grid: tuple[int, ...]) -> BatchSimulator:
+        """The analytic-envelope engine for one candidate grid (memoized
+        packed schedule; prices whole assignment stacks in one call)."""
+        return batch_simulator(
+            self.pattern, self.spec, grid,
+            step_flops=self.step_flops, elem_bytes=self.elem_bytes,
+            backpressure=self.backpressure, steps=self.steps,
+        )
+
+    def beam_pricer(self, factors: Sequence[int]) -> BatchSimulator | None:
+        """The batch engine for pricing a beam of placements of one grid
+        (the tuner groups these into one registry-wide pass via
+        ``sim.batch.price_stacks``); ``None`` when this model is pinned
+        to the exact event engine."""
+        if self.engine != "batched":
+            return None
+        return self.batch(self._validate(factors))
+
+    def price_assignments(self, factors: Sequence[int],
+                          assignments: np.ndarray) -> np.ndarray:
+        """(N,) predicted seconds per step for a stack of bijective
+        placements of one grid. Batched models price the whole stack in
+        one ``candidates x phases x ports`` pass; event models replay
+        each placement through the exact queue (the reference both
+        engines are benchmarked against)."""
+        grid = self._validate(factors)
+        if self.engine == "event":
+            a = np.asarray(assignments, dtype=np.int64)
+            a = a.reshape(a.shape[0], *grid)
+            return np.array([
+                self.simulate(grid, row).per_step_time() for row in a
+            ])
+        return self.batch(grid).step_times(assignments)
 
     def simulate(self, grid: tuple[int, ...], assign: np.ndarray) -> Timeline:
+        """The exact event-queue reference for one placement (used for
+        ``--simulate`` timelines and engine cross-validation)."""
         topo = Topology.from_spec(self.spec)
         phases = build_phases(self.pattern, grid, assign,
                               elem_bytes=self.elem_bytes)
@@ -287,10 +343,14 @@ def simulate_app(app, procs: int | None = None, *,
 
 
 def time_search_space(app, *, steps: int = DEFAULT_STEPS,
-                      elem_bytes: int = DEFAULT_ELEM_BYTES):
+                      elem_bytes: int = DEFAULT_ELEM_BYTES,
+                      engine: str = "batched"):
     """The app's SearchSpace with its volume objective swapped for the
     simulator — same grids, options, distributions and orders; only
-    ``cost_model`` changes, so the tuner runs unchanged."""
+    ``cost_model`` changes, so the tuner runs unchanged. ``engine``
+    picks the batched analytic envelope (default) or the exact event
+    queue (``"event"``, the reference the envelope is validated
+    against)."""
     base_space = app.search_space
     if base_space is None:
         raise ValueError(f"application {app.name!r} declares no search space")
@@ -307,13 +367,15 @@ def time_search_space(app, *, steps: int = DEFAULT_STEPS,
             base=base_space.cost_model(procs, opts),
             elem_bytes=elem_bytes,
             steps=steps,
+            engine=engine,
         )
 
     return dataclasses.replace(base_space, cost_model=cost_model)
 
 
 def time_tuned_app(app, *, steps: int = DEFAULT_STEPS,
-                   elem_bytes: int = DEFAULT_ELEM_BYTES):
+                   elem_bytes: int = DEFAULT_ELEM_BYTES,
+                   engine: str = "batched"):
     """A copy of ``app`` whose tuner searches predicted seconds. The
     legacy volume-pair oracle is dropped from the copy (its units are
     elements, not seconds); ``benchmarks/sim_eval.py`` re-checks the
@@ -321,7 +383,7 @@ def time_tuned_app(app, *, steps: int = DEFAULT_STEPS,
     return dataclasses.replace(
         app,
         search_space=time_search_space(app, steps=steps,
-                                       elem_bytes=elem_bytes),
+                                       elem_bytes=elem_bytes, engine=engine),
         tuning=None,
     )
 

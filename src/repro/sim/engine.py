@@ -186,6 +186,10 @@ def simulate_steps(
         raise ValueError(f"steps must be >= 1, got {steps}")
     if backpressure < 1:
         raise ValueError(f"backpressure must be >= 1, got {backpressure}")
+    # The reference engine prices each phase independently — deliberately
+    # the simple, legible formulation. The batched engine
+    # (repro.sim.batch) prices whole candidate beams in one bucketed pass
+    # and is validated against this path to 1e-9.
     durations = [
         topology.phase_time(ph.src, ph.dst, ph.nbytes) for ph in phases
     ]

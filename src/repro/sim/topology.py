@@ -20,12 +20,18 @@ the max over ports of ``n_msgs * alpha + port_bytes / beta`` — the
 standard congestion (max-load) alpha-beta cost used by static mapping
 cost models.
 
-Everything is vectorized over transfer arrays with NumPy so the simulator
-can price thousands of transfers per event without Python loops.
+The hot path is fully array-programmed: crossing levels come from a
+precomputed all-pairs LCA-level matrix (one ``int8`` gather per transfer
+instead of per-transfer coordinate walks), and congestion pricing is a
+single bincount / ``np.add.reduceat`` pass over an arbitrary *bucket*
+axis — one bucket per phase for the event engine, ``candidates x
+phases`` buckets for the batched engine (``repro.sim.batch``) — so
+thousands of phases across a whole tuner beam are priced in one call.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
@@ -41,6 +47,63 @@ from repro.core.machine import MachineSpec
 #: full-scale latency studies.
 DEFAULT_ALPHA_OUTER = 2e-7      # seconds, inter-node message setup
 DEFAULT_ALPHA_INNER = 5e-8      # seconds, intra-node / on-fabric setup
+
+#: Above this processor count the all-pairs LCA matrix (nprocs^2 int8)
+#: is not materialized; crossing levels fall back to the coordinate
+#: comparison. 8192 procs -> 64 MiB, the largest worth caching.
+LCA_MATRIX_MAX_PROCS = 8192
+
+#: Dense-bincount ceiling for congestion pricing: when
+#: ``n_buckets * n_ports`` exceeds this, the sparse sorted-key
+#: ``np.add.reduceat`` path is used instead (same float results —
+#: both sum each port's bytes in transfer order).
+_DENSE_PORT_CELLS = 1 << 23
+
+#: FIFO bound on cached LCA matrices — entries near the processor
+#: ceiling are tens of MiB, so a long-lived process sweeping machine
+#: shapes must not accumulate them without eviction.
+_LCA_CACHE_MAX = 16
+
+_LCA_CACHE: dict[tuple[int, ...], np.ndarray] = {}
+
+
+def lca_level_matrix(shape: Sequence[int]) -> np.ndarray:
+    """All-pairs crossing-level matrix for a machine shape (cached).
+
+    ``M[p, q]`` is the outermost level where the row-major coordinates of
+    processors ``p`` and ``q`` differ, and ``len(shape)`` on the diagonal
+    (a local copy that never touches the network). ``int8`` — one byte
+    per processor pair.
+    """
+    shape = tuple(int(s) for s in shape)
+    cached = _LCA_CACHE.get(shape)
+    if cached is not None:
+        return cached
+    n = int(np.prod(shape))
+    if n > LCA_MATRIX_MAX_PROCS:
+        raise ValueError(
+            f"{n} processors exceeds the {LCA_MATRIX_MAX_PROCS} LCA-matrix "
+            f"ceiling; use coordinate crossing levels instead"
+        )
+    k = len(shape)
+    # Built level by level, innermost first, so the outermost differing
+    # coordinate overwrites last — peak transient memory is one (n, n)
+    # bool per pass rather than (n, n, k) + int64 intermediates.
+    mat = np.full((n, n), k, dtype=np.int8)
+    coords = np.unravel_index(np.arange(n), shape)
+    for lvl in range(k - 1, -1, -1):
+        c = coords[lvl]
+        mat[c[:, None] != c[None, :]] = lvl
+    mat.setflags(write=False)
+    _LCA_CACHE[shape] = mat
+    while len(_LCA_CACHE) > _LCA_CACHE_MAX:
+        _LCA_CACHE.pop(next(iter(_LCA_CACHE)))
+    return mat
+
+
+def lca_cache_clear() -> None:
+    """Drop all cached LCA matrices (tests / memory-sensitive sweeps)."""
+    _LCA_CACHE.clear()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +137,12 @@ class Topology:
     def nprocs(self) -> int:
         return self.spec.nprocs
 
+    @property
+    def port_strides(self) -> tuple[int, ...]:
+        """Flat-id divisor per level: ``proc // stride[L]`` is the flat
+        index of the level-(L+1) subtree (= port id) containing ``proc``."""
+        return self.spec.level_strides
+
     def coords(self, procs: np.ndarray) -> np.ndarray:
         """(n, k) level coordinates of flat processor ids (row-major)."""
         procs = np.asarray(procs, dtype=np.int64)
@@ -85,7 +154,11 @@ class Topology:
         """Outermost level where src and dst coordinates differ (the fabric
         the message crosses); ``k`` (= number of levels) for src == dst,
         i.e. a local copy that never touches the network."""
-        cs, cd = self.coords(np.asarray(src)), self.coords(np.asarray(dst))
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        if self.nprocs <= LCA_MATRIX_MAX_PROCS:
+            return lca_level_matrix(self.spec.shape)[src, dst]
+        cs, cd = self.coords(src), self.coords(dst)
         diff = cs != cd
         k = diff.shape[-1]
         # argmax finds the first True; all-False rows (same proc) map to k.
@@ -97,9 +170,103 @@ class Topology:
         return self.alphas[level] + float(nbytes) / self.betas[level]
 
     # ----------------------------------------------------------- congestion
+    def bucket_times(self, src: np.ndarray, dst: np.ndarray,
+                     nbytes: np.ndarray, bucket: np.ndarray,
+                     n_buckets: int) -> np.ndarray:
+        """Congestion-priced completion time of ``n_buckets`` independent
+        transfer sets in one vectorized pass.
+
+        ``bucket`` maps each transfer to its set (a phase for the event
+        engine; ``candidate * n_phases + phase`` for the batched engine).
+        Within each bucket the transfers run concurrently: every level-L
+        crossing loads the egress port of its source subtree and the
+        ingress port of its destination subtree (full duplex), and the
+        bucket completes when its most-loaded port drains::
+
+            time[b] = max over ports ( msgs * alpha[L] + bytes / beta[L] )
+
+        Port loads are accumulated with ``np.bincount`` (or, past the
+        dense ceiling, a sorted-key ``np.add.reduceat`` segment pass);
+        both sum each port's bytes in transfer order, so the result is
+        bit-identical to the legacy per-transfer accumulation.
+        """
+        src = np.asarray(src, dtype=np.int64)
+        nbytes = np.broadcast_to(
+            np.asarray(nbytes, dtype=np.float64), src.shape
+        ).reshape(-1)
+        src = src.reshape(-1)
+        dst = np.asarray(dst, dtype=np.int64).reshape(-1)
+        bucket = np.asarray(bucket, dtype=np.int64).reshape(-1)
+        n_buckets = int(n_buckets)
+        out = np.zeros(n_buckets, dtype=np.float64)
+        if src.size == 0:
+            return out
+        k = len(self.spec.shape)
+        levels = self.crossing_levels(src, dst).astype(np.int64)
+        valid = levels < k               # local copies never hit the fabric
+        if not valid.all():
+            levels, bucket = levels[valid], bucket[valid]
+            src, dst, nbytes = src[valid], dst[valid], nbytes[valid]
+        if src.size == 0:
+            return out
+        # One unified (level, direction, bucket, port) key per port load:
+        # the whole pass — every level, both full-duplex directions, all
+        # buckets — is two bincounts (or one sorted reduceat sweep). Each
+        # level contributes only its true port count (level 0 of a
+        # (nodes, gpus) machine has `nodes` NICs, not `nprocs`).
+        strides = np.asarray(self.port_strides, dtype=np.int64)
+        nports = self.nprocs // strides                   # per level
+        per_lvl = 2 * n_buckets * nports
+        offsets = np.r_[0, np.cumsum(per_lvl)]
+        cells = int(offsets[-1])
+        t_np = nports[levels]
+        base = offsets[levels] + bucket * t_np
+        dir_off = n_buckets * t_np
+        key = np.concatenate([base + src // strides[levels],
+                              base + dir_off + dst // strides[levels]])
+        w = np.concatenate([nbytes, nbytes])
+        # Dense bincount when the port table is reasonably filled; the
+        # sorted sparse sweep when transfers are much sparser than the
+        # table (zeroing/scanning empty cells would dominate).
+        if cells <= _DENSE_PORT_CELLS and cells <= max(4096, 8 * key.size):
+            load = np.bincount(key, weights=w, minlength=cells)
+            msgs = np.bincount(key, minlength=cells)
+            for lvl in range(k):
+                sl = slice(offsets[lvl], offsets[lvl + 1])
+                t = (msgs[sl] * self.alphas[lvl]
+                     + load[sl] / self.betas[lvl])
+                np.maximum(
+                    out,
+                    t.reshape(2, n_buckets, nports[lvl]).max(axis=(0, 2)),
+                    out=out,
+                )
+            return out
+        # Sparse path: stable sort keeps equal keys in transfer order.
+        # reduceat's pairwise float summation can differ from bincount's
+        # sequential accumulation by rounding ulps — far inside the 1e-9
+        # engine-agreement contract benchmarks/sim_eval.py enforces.
+        order = np.argsort(key, kind="stable")
+        sk, sw = key[order], w[order]
+        starts = np.r_[0, np.flatnonzero(np.diff(sk)) + 1]
+        load = np.add.reduceat(sw, starts)
+        msgs = np.diff(np.r_[starts, sk.size])
+        cell = sk[starts]
+        lvl = np.searchsorted(offsets, cell, side="right") - 1
+        t = (msgs * np.asarray(self.alphas)[lvl]
+             + load / np.asarray(self.betas)[lvl])
+        # Fold per-port times to per-(level, direction, bucket) maxima
+        # (contiguous runs of the sorted keys), then into the buckets.
+        c_np = nports[lvl]
+        group_bucket = (cell - offsets[lvl]) % (n_buckets * c_np) // c_np
+        group = (cell - offsets[lvl]) // c_np + 2 * n_buckets * lvl
+        g_starts = np.r_[0, np.flatnonzero(np.diff(group)) + 1]
+        g_max = np.maximum.reduceat(t, g_starts)
+        np.maximum.at(out, group_bucket[g_starts], g_max)
+        return out
+
     def phase_time(self, src: np.ndarray, dst: np.ndarray,
                    nbytes: np.ndarray) -> float:
-        """Time for a set of concurrent transfers under port contention.
+        """Time for one set of concurrent transfers under port contention.
 
         For each level ``L``, the transfers crossing at ``L`` load the
         egress port of the subtree ``src[:L+1]`` and the ingress port of
@@ -108,45 +275,35 @@ class Topology:
         Same-processor transfers are free (no network crossing).
         """
         src = np.asarray(src, dtype=np.int64).reshape(-1)
-        dst = np.asarray(dst, dtype=np.int64).reshape(-1)
-        nbytes = np.broadcast_to(
-            np.asarray(nbytes, dtype=np.float64), src.shape
-        )
-        if src.size == 0:
-            return 0.0
-        levels = self.crossing_levels(src, dst)
-        k = len(self.spec.shape)
-        worst = 0.0
-        cs, cd = self.coords(src), self.coords(dst)
-        for lvl in range(k):
-            mask = levels == lvl
-            if not mask.any():
-                continue
-            # Port id = flat index of the level-(lvl+1) subtree containing
-            # the endpoint: unique per (coords[0..lvl]) prefix.
-            dims = self.spec.shape[: lvl + 1]
-            sub_s = np.ravel_multi_index(
-                tuple(cs[mask, i] for i in range(lvl + 1)), dims
-            )
-            sub_d = np.ravel_multi_index(
-                tuple(cd[mask, i] for i in range(lvl + 1)), dims
-            )
-            # Full-duplex ports: egress and ingress are separate directions
-            # of the same link, each with the level's bandwidth.
-            nports = int(np.prod(dims))
-            load = np.zeros((2, nports), dtype=np.float64)
-            msgs = np.zeros((2, nports), dtype=np.float64)
-            np.add.at(load[0], sub_s, nbytes[mask])
-            np.add.at(load[1], sub_d, nbytes[mask])
-            np.add.at(msgs[0], sub_s, 1.0)
-            np.add.at(msgs[1], sub_d, 1.0)
-            port_t = msgs * self.alphas[lvl] + load / self.betas[lvl]
-            worst = max(worst, float(port_t.max()))
-        return worst
+        bucket = np.zeros(src.shape, dtype=np.int64)
+        return float(self.bucket_times(src, dst, nbytes, bucket, 1)[0])
+
+    def phase_times(self, phases: Sequence) -> np.ndarray:
+        """Congestion-priced durations of a whole phase list in one pass
+        (one bucket per phase). Equivalent to ``[phase_time(ph.src,
+        ph.dst, ph.nbytes) for ph in phases]`` but without the per-phase
+        Python loop — the event engine's schedule pricing."""
+        n = len(phases)
+        if n == 0:
+            return np.zeros(0, dtype=np.float64)
+        sizes = [ph.src.size for ph in phases]
+        if not any(sizes):
+            return np.zeros(n, dtype=np.float64)
+        src = np.concatenate([ph.src for ph in phases])
+        dst = np.concatenate([ph.dst for ph in phases])
+        nbytes = np.concatenate([
+            np.broadcast_to(np.asarray(ph.nbytes, np.float64), ph.src.shape)
+            for ph in phases
+        ])
+        bucket = np.repeat(np.arange(n, dtype=np.int64), sizes)
+        return self.bucket_times(src, dst, nbytes, bucket, n)
 
 
 __all__ = [
     "DEFAULT_ALPHA_INNER",
     "DEFAULT_ALPHA_OUTER",
+    "LCA_MATRIX_MAX_PROCS",
     "Topology",
+    "lca_cache_clear",
+    "lca_level_matrix",
 ]

@@ -18,11 +18,17 @@ from repro.core.commvolume import HaloCostModel
 from repro.core.machine import PAPER_CLUSTER, MachineSpec
 from repro.core.translate import to_spmd
 from repro.search.tuner import tune_app
+from repro.sim.batch import (
+    batch_simulator,
+    canonical_assignment,
+    price_stacks,
+)
 from repro.sim.collectives import (
     CollectivePattern,
     Phase,
     alltoall,
     build_phases,
+    packed_schedule,
     ring_allgather,
     tree_broadcast,
     tree_reduce,
@@ -31,10 +37,11 @@ from repro.sim.cost import (
     SimulatedTimeCostModel,
     default_assignment,
     simulate_app,
+    time_search_space,
     time_tuned_app,
 )
 from repro.sim.engine import Task, simulate_steps, simulate_tasks
-from repro.sim.topology import Topology
+from repro.sim.topology import Topology, lca_level_matrix
 
 STENCIL_LENGTHS = (1024, 8192)
 
@@ -397,6 +404,230 @@ def test_simulate_app_honors_plan_backpressure():
     assert rep.max_in_flight == 1
     rep2 = simulate_app(apps.get("summa"))      # Backpressure summa 2
     assert rep2.backpressure == 2
+
+
+# ------------------------------------------------------- batched engine
+def _both_engines(pattern, spec, grid, assign, *, step_flops=1e12,
+                  backpressure=2, steps=3):
+    """(batched step time, event step time) of one placement."""
+    bs = batch_simulator(pattern, spec, grid, step_flops=step_flops,
+                         backpressure=backpressure, steps=steps)
+    topo = Topology.from_spec(spec)
+    phases = build_phases(pattern, grid, assign)
+    compute_s = step_flops / (spec.nprocs * spec.peak_flops)
+    tl = simulate_steps(phases, topo, compute_s=compute_s, steps=steps,
+                        backpressure=backpressure)
+    return bs.step_time(np.asarray(assign)), tl.per_step_time()
+
+
+HALO22 = CollectivePattern("halo", {"lengths": (64, 64)})
+
+
+def test_lca_matrix_matches_coordinate_walk():
+    for shape in [(2, 4), (8,), (1, 4), (4, 1), (2, 2, 2)]:
+        topo = Topology.from_spec(
+            MachineSpec(shape=shape, level_names=tuple("l%d" % i
+                                                       for i in range(len(shape)))))
+        n = topo.nprocs
+        mat = lca_level_matrix(shape)
+        src, dst = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+        cs, cd = topo.coords(src.reshape(-1)), topo.coords(dst.reshape(-1))
+        diff = cs != cd
+        expect = np.where(diff.any(axis=-1), np.argmax(diff, axis=-1),
+                          len(shape)).reshape(n, n)
+        np.testing.assert_array_equal(mat, expect)
+
+
+def test_bucket_times_matches_per_phase_pricing():
+    """The bucketed pass (dense and sparse) reproduces phase_time exactly."""
+    rng = np.random.default_rng(7)
+    topo = Topology.from_spec(MachineSpec(shape=(4, 8),
+                                          level_names=("node", "gpu")))
+    phases = [
+        Phase(f"p{i}", rng.integers(0, 32, 50), rng.integers(0, 32, 50),
+              rng.uniform(1e3, 1e6, 50))
+        for i in range(6)
+    ]
+    expect = np.array([topo.phase_time(p.src, p.dst, p.nbytes)
+                       for p in phases])
+    got = topo.phase_times(phases)
+    np.testing.assert_array_equal(got, expect)
+    # Force the sparse path by inflating the bucket count.
+    src = np.concatenate([p.src for p in phases])
+    dst = np.concatenate([p.dst for p in phases])
+    w = np.concatenate([p.nbytes for p in phases])
+    bucket = np.repeat(np.arange(6), [p.src.size for p in phases])
+    import repro.sim.topology as topo_mod
+    old = topo_mod._DENSE_PORT_CELLS
+    topo_mod._DENSE_PORT_CELLS = 1
+    try:
+        sparse = topo.bucket_times(src, dst, w, bucket, 6)
+    finally:
+        topo_mod._DENSE_PORT_CELLS = old
+    # The sparse sweep's pairwise reduceat sums may differ from the dense
+    # bincount by rounding ulps — far inside the 1e-9 engine contract.
+    np.testing.assert_allclose(sparse, expect, rtol=1e-12, atol=0)
+
+
+def test_batch_engine_matches_event_engine_registry_paper_scale():
+    """The acceptance contract: batched analytic envelope == event-queue
+    per-step time to 1e-9 on the paper cluster for all nine apps."""
+    for app in apps.iter_apps():
+        sp = time_search_space(app)
+        n = app.default_procs
+        for opts in app.search_space.option_combos():
+            model = sp.cost_model(n, dict(opts))
+            for grid in app.search_space.grids(n):
+                try:
+                    model.base.cost(grid)
+                except ValueError:
+                    continue
+                assign = model._default_assignment(grid)
+                t_batch = model.batch(grid).step_time(assign)
+                t_event = model.simulate(grid, assign).per_step_time()
+                assert t_batch == pytest.approx(t_event, abs=1e-9), (
+                    app.name, grid)
+
+
+@pytest.mark.parametrize("shape,grid", [
+    ((1, 4), (2, 2)),          # single-node machine
+    ((4, 1), (2, 2)),          # one processor per node
+    ((8,), (2, 4)),            # flat machine
+    ((2, 4), (1, 8)),          # degenerate grid, unit leading axis
+    ((2, 4), (8, 1)),          # degenerate grid, unit trailing axis
+    ((1, 1), (1, 1)),          # single processor
+])
+def test_engines_agree_on_topology_edge_cases(shape, grid):
+    spec = MachineSpec(shape=shape,
+                       level_names=("node", "gpu")[: len(shape)])
+    assign = default_assignment(shape, grid)
+    for bp in (1, 2):
+        tb, te = _both_engines(HALO22, spec, grid, assign, backpressure=bp)
+        assert tb == pytest.approx(te, abs=1e-9)
+
+
+def test_engines_agree_on_bandwidth_ties():
+    """Equal per-level bandwidths (no fast intra-node fabric) price
+    identically through both engines."""
+    spec = MachineSpec(shape=(2, 4), level_names=("node", "gpu"),
+                       link_bws=(5e9, 5e9))
+    assign = default_assignment((2, 4), (2, 4))
+    tb, te = _both_engines(HALO22, spec, (2, 4), assign)
+    assert tb == pytest.approx(te, abs=1e-9)
+
+
+def test_engines_agree_on_single_step_and_deep_backpressure():
+    spec = PAPER_CLUSTER
+    assign = default_assignment(spec.shape, (2, 4))
+    for bp, steps in [(1, 1), (2, 1), (4, 3), (2, 3)]:
+        tb, te = _both_engines(HALO22, spec, (2, 4), assign,
+                               backpressure=bp, steps=steps)
+        assert tb == pytest.approx(te, abs=1e-9)
+
+
+def test_one_proc_groups_emit_no_phases():
+    assert ring_allgather([5], 1e6) == []
+    assert tree_broadcast([3], 1e6) == []
+    assert alltoall([7], 1e6) == []
+    spec = MachineSpec(shape=(1, 1), level_names=("node", "gpu"))
+    bs = batch_simulator(HALO22, spec, (1, 1), step_flops=1e12)
+    # No fabric at all: step time is the pure compute leg.
+    assert bs.step_time(np.zeros((1, 1), np.int64)) == pytest.approx(
+        1e12 / spec.peak_flops)
+
+
+def test_packed_schedule_is_memoized_and_dedups_slabs():
+    pattern = CollectivePattern("gather_scatter", {"nodes_per_piece": 4})
+    a = packed_schedule(pattern, (8,))
+    assert packed_schedule(pattern, (8,)) is a           # cache hit
+    # Two rings of 7 identical rounds each, and reduce-scatter reuses the
+    # all-gather wire schedule: 14 phases collapse to ONE unique slab.
+    assert a.n_phases == 14
+    assert a.n_unique == 1
+    # An equal-content pattern (different object) hits the same entry.
+    twin = CollectivePattern("gather_scatter", {"nodes_per_piece": 4})
+    assert packed_schedule(twin, (8,)) is a
+
+
+def test_pattern_params_may_hold_arrays_and_dicts():
+    """Memoization keys must accept the unhashable param values the
+    pre-cache code tolerated (ndarray lengths, nested dicts)."""
+    pattern = CollectivePattern(
+        "halo", {"lengths": np.array([64, 64]), "meta": {"note": "x"}})
+    assign = default_assignment((2, 4), (2, 4))
+    phases = build_phases(pattern, (2, 4), assign)
+    ref = build_phases(HALO22, (2, 4), assign)
+    assert [p.total_bytes for p in phases] == [p.total_bytes for p in ref]
+
+
+def test_build_phases_memoized_by_assignment_digest():
+    assign = default_assignment((2, 4), (2, 4))
+    a = build_phases(HALO22, (2, 4), assign)
+    b = build_phases(HALO22, (2, 4), assign.copy())      # equal content
+    assert all(x.src is y.src for x, y in zip(a, b))     # shared slabs
+    other = build_phases(HALO22, (2, 4), assign.T.reshape(2, 4))
+    assert any(not np.array_equal(x.src, y.src) for x, y in zip(a, other))
+
+
+def test_canonical_assignment_collapses_relabelings():
+    assign = default_assignment((2, 4), (2, 4))
+    canon = canonical_assignment(assign, (2, 4))
+    # Swap the two nodes and permute gpus inside one node: same class.
+    relabeled = (1 - assign // 4) * 4 + (assign % 4 + 1) % 4
+    assert not np.array_equal(assign, relabeled)
+    np.testing.assert_array_equal(
+        canonical_assignment(relabeled, (2, 4)), canon)
+    # And the batch engine prices the two placements identically.
+    bs = batch_simulator(HALO22, PAPER_CLUSTER, (2, 4), step_flops=1e12)
+    times = bs.step_times(np.stack([assign, relabeled]))
+    assert times[0] == times[1]
+    # A structurally different placement leaves the class.
+    rr = (assign % 2) * 4 + assign // 2
+    assert not np.array_equal(canonical_assignment(rr, (2, 4)), canon)
+
+
+def test_price_stacks_matches_per_stack_pricing():
+    spec = PAPER_CLUSTER
+    halo3 = CollectivePattern("halo", {"lengths": (32, 96), "fields": 3})
+    b1 = batch_simulator(HALO22, spec, (2, 4), step_flops=1e12)
+    b2 = batch_simulator(halo3, spec, (4, 2), step_flops=1e12,
+                         backpressure=1)
+    s1 = np.stack([default_assignment(spec.shape, (2, 4)),
+                   np.arange(8).reshape(2, 4)])
+    s2 = np.stack([np.arange(8).reshape(4, 2)])
+    grouped = price_stacks([(b1, s1), (b2, s2)])
+    np.testing.assert_array_equal(grouped[0], b1.step_times(s1))
+    np.testing.assert_array_equal(grouped[1], b2.step_times(s2))
+
+
+def test_cost_model_engines_agree_and_validate():
+    model_b = _stencil_cost_model(default_assignment(PAPER_CLUSTER.shape,
+                                                     (2, 4)))
+    model_e = dataclasses_replace_engine(model_b, "event")
+    assert model_b.cost((2, 4)) == pytest.approx(model_e.cost((2, 4)),
+                                                 abs=1e-9)
+    with pytest.raises(ValueError):
+        dataclasses_replace_engine(model_b, "warp")
+
+
+def dataclasses_replace_engine(model, engine):
+    import dataclasses
+
+    return dataclasses.replace(model, engine=engine)
+
+
+def test_tuner_dedups_isomorphic_placements():
+    """Variants whose placements only relabel processors within machine
+    levels are priced once; the winner is unaffected (identical costs)."""
+    rep = tune_app(time_tuned_app(apps.get("cannon")), 64)
+    assert rep.best.placed_cost is not None
+    assert rep.best.placed_cost <= min(
+        s.placed_cost for s in rep.leaderboard if s.placed_cost is not None
+    )
+    keys = {
+        (s.candidate.grid, s.candidate.options) for s in rep.leaderboard
+    }
+    assert keys                                          # beam survived
 
 
 # ----------------------------------------------------- default placement
