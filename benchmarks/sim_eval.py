@@ -32,10 +32,24 @@ perf-regression lane re-checks the recorded value).
 **Scale** — ``time_tuned_app`` must complete the full nine-app registry
 at ``--scale-procs`` (default 1024) processors inside ``SCALE_BUDGET_S``.
 
+**Scale suite** (``--scale``) — the 100k-proc lane, merged into an
+existing ``BENCH_sim.json`` when one is present:
+
+  * **fold parity**: symmetry-folded + incremental pricing must be
+    *bit-equal* to dense pricing for every candidate placement of the
+    probe apps at ``FOLD_PARITY_PROCS``, and the fold must actually
+    fire (``FOLD_STATS['pairs_folded'] > 0``);
+  * **registry at 16384**: the full nine-app registry time-tunes at
+    ``SCALE_REGISTRY_PROCS`` inside ``SCALE_BUDGET_S``;
+  * **XL**: one app (``stencil`` — 131072 has no square grid, so the
+    systolic apps drop out) time-tunes at ``SCALE_XL_PROCS`` inside
+    ``SCALE_BUDGET_S``.
+
 ``--quick`` runs the paper-scale tuning sweep + engine parity only (the
 CI sim-smoke lane).
 
     PYTHONPATH=src python benchmarks/sim_eval.py --json BENCH_sim.json
+    PYTHONPATH=src python benchmarks/sim_eval.py --scale --json BENCH_sim.json
 """
 from __future__ import annotations
 
@@ -51,7 +65,7 @@ import numpy as np
 from repro import apps
 from repro.search.space import build_program
 from repro.search.tuner import tune_app
-from repro.sim.batch import price_stacks
+from repro.sim.batch import FOLD_STATS, fold_stats_reset, price_stacks
 from repro.sim.cost import time_search_space, time_tuned_app
 
 CHIPS = 64
@@ -61,6 +75,13 @@ ENGINE_ATOL = 1e-9       # acceptance: batched-vs-event per-step agreement
 SPEEDUP_FLOOR = 10.0     # acceptance: batched >= 10x event on the sweep
 SCALE_PROCS = 1024
 SCALE_BUDGET_S = 60.0    # acceptance: full registry time-tuning at scale
+
+# --scale lane (the 100k-proc suite)
+FOLD_PARITY_PROCS = 4096      # folded == dense bit-equality probe scale
+FOLD_PARITY_APPS = ("summa", "stencil", "cannon")
+SCALE_REGISTRY_PROCS = 16384  # full registry must tune inside SCALE_BUDGET_S
+SCALE_XL_PROCS = 131072       # one app must tune inside SCALE_BUDGET_S
+SCALE_XL_APP = "stencil"      # 2^17 has no square grid; halo still factors
 
 
 def _rank_agreement(report, app) -> float | None:
@@ -247,6 +268,88 @@ def scale_bench(report=print, procs: int = SCALE_PROCS) -> dict:
     }
 
 
+def _app_by_name(name: str):
+    for app in apps.iter_apps():
+        if app.name == name:
+            return app
+    raise KeyError(name)
+
+
+def fold_parity(report=print, procs: int = FOLD_PARITY_PROCS) -> dict:
+    """Symmetry-folded + incremental pricing vs dense pricing, bit-equal,
+    for every candidate placement of the probe apps at ``procs`` — and
+    the fold must actually fire (otherwise this lane proves nothing)."""
+    fold_stats_reset()
+    worst_exact = True
+    n_checked = 0
+    for name in FOLD_PARITY_APPS:
+        app = _app_by_name(name)
+        sp = time_search_space(app)
+        shape = tuple(int(s) for s in app.machine_shape(procs))
+        for opts in app.search_space.option_combos():
+            model = sp.cost_model(procs, dict(opts))
+            for grid in app.search_space.grids(procs):
+                try:
+                    model._validate(grid)
+                except ValueError:
+                    continue
+                cands = [model._default_assignment(grid)]
+                for c in app.search_space.variants(grid, tuple(opts), shape):
+                    prog = build_program(shape, c, "scale_bench")
+                    a = prog.mapper.assignment_grid(c.grid, use_cache=False)
+                    flat = a.reshape(-1)
+                    if flat.size == procs and len(np.unique(flat)) == procs:
+                        cands.append(np.asarray(a))
+                stack = np.stack(cands)
+                eng = model.batch(grid)
+                t_fold = eng.step_times(stack)
+                t_dense = eng.step_times(stack, fold=False, incremental=False)
+                worst_exact = worst_exact and bool(
+                    np.array_equal(t_fold, t_dense))
+                n_checked += len(stack)
+    stats = dict(FOLD_STATS)
+    ok = worst_exact and stats["pairs_folded"] > 0
+    report(f"fold parity ({procs} procs): {n_checked} placements, "
+           f"folded == dense bit-equal: {worst_exact}, "
+           f"pairs folded {stats['pairs_folded']} / "
+           f"priced {stats['pairs_priced']} "
+           f"({'OK' if ok else 'FAIL'})")
+    return {"procs": procs, "apps": list(FOLD_PARITY_APPS),
+            "placements": n_checked, "bit_equal": worst_exact,
+            "fold_stats": stats, "ok": ok}
+
+
+def xl_bench(report=print, procs: int = SCALE_XL_PROCS,
+             app_name: str = SCALE_XL_APP) -> dict:
+    """One app time-tuned at 100k+ procs against the wall-clock budget."""
+    app = _app_by_name(app_name)
+    t0 = time.perf_counter()
+    rep = tune_app(time_tuned_app(app), procs)
+    elapsed = time.perf_counter() - t0
+    ok = elapsed < SCALE_BUDGET_S and rep.verified
+    report(f"XL tuning: {app_name} at {procs} procs -> "
+           f"{rep.best.candidate.describe()} "
+           f"({rep.best.placed_cost:.3e}s/step) in {elapsed:.2f}s "
+           f"(budget {SCALE_BUDGET_S:.0f}s, {'OK' if ok else 'FAIL'})")
+    return {"app": app_name, "procs": procs,
+            "winner": rep.best.candidate.describe(),
+            "winner_time_s": rep.best.placed_cost,
+            "candidates": rep.candidates_considered,
+            "verified": rep.verified,
+            "elapsed_s": elapsed, "budget_s": SCALE_BUDGET_S,
+            "within_budget": elapsed < SCALE_BUDGET_S}
+
+
+def scale_suite(report=print) -> dict:
+    """The --scale deliverable: fold parity, the 16384-proc registry
+    sweep, and the 131072-proc XL lane."""
+    return {
+        "fold_parity": fold_parity(report),
+        "registry": scale_bench(report, SCALE_REGISTRY_PROCS),
+        "xl": xl_bench(report),
+    }
+
+
 def run(report=print, chips: int = CHIPS, quick: bool = False,
         scale_procs: int = SCALE_PROCS,
         json_path: str | None = "BENCH_sim.json") -> dict:
@@ -323,22 +426,25 @@ def check(result: dict) -> list[str]:
     """Acceptance gates over a run's (or a loaded BENCH_sim.json's)
     result — shared by main() and the CI perf-regression lane."""
     errors = []
-    if not result["all_match_tuned_oracle"]:
+    # .get-guarded: a --scale-only run merges into (or stands in for) a
+    # full run's JSON, so the full-run keys may be absent.
+    if not result.get("all_match_tuned_oracle", True):
         errors.append("a simulated-time winner missed the Table 2 tuning "
                       "oracle at paper scale")
-    if result["any_default_regression"]:
+    if result.get("any_default_regression", False):
         errors.append("a simulated-time winner regressed the untuned "
                       "default volume")
-    if result["mean_rank_agreement"] is not None \
+    if result.get("mean_rank_agreement") is not None \
             and result["mean_rank_agreement"] < MIN_AGREEMENT:
         errors.append(f"sim-vs-volume ranking agreement "
                       f"{result['mean_rank_agreement']:.2f} < {MIN_AGREEMENT}")
-    if not result["within_budget"]:
+    if not result.get("within_budget", True):
         errors.append(f"tuning sweep took {result['elapsed_s']:.2f}s "
                       f"(budget {result['time_budget_s']:.0f}s)")
-    if not result["engine_parity"]["ok"]:
+    parity = result.get("engine_parity")
+    if parity is not None and not parity["ok"]:
         errors.append(f"batched engine diverged from the event engine by "
-                      f"{result['engine_parity']['max_abs_diff_s']:.3e}s "
+                      f"{parity['max_abs_diff_s']:.3e}s "
                       f"(> {ENGINE_ATOL:g})")
     eng = result.get("engine_bench")
     if eng is not None and eng["speedup"] < eng["speedup_floor"]:
@@ -355,6 +461,31 @@ def check(result: dict) -> list[str]:
     if scale is not None and not scale["all_verified"]:
         errors.append(f"a {scale['procs']}-proc winner failed DSL "
                       f"verification")
+    suite = result.get("scale_suite")
+    if suite is not None:
+        fp = suite["fold_parity"]
+        if not fp["bit_equal"]:
+            errors.append(f"folded pricing diverged from dense pricing at "
+                          f"{fp['procs']} procs (must be bit-equal)")
+        if fp["fold_stats"]["pairs_folded"] <= 0:
+            errors.append("symmetry folding never fired on the fold-parity "
+                          "probe apps")
+        reg = suite["registry"]
+        if not reg["within_budget"]:
+            errors.append(f"registry tuning at {reg['procs']} procs took "
+                          f"{reg['elapsed_s']:.2f}s "
+                          f"(budget {reg['budget_s']:.0f}s)")
+        if not reg["all_verified"]:
+            errors.append(f"a {reg['procs']}-proc winner failed DSL "
+                          f"verification")
+        xl = suite["xl"]
+        if not xl["within_budget"]:
+            errors.append(f"XL tuning ({xl['app']} at {xl['procs']} procs) "
+                          f"took {xl['elapsed_s']:.2f}s "
+                          f"(budget {xl['budget_s']:.0f}s)")
+        if not xl["verified"]:
+            errors.append(f"the {xl['procs']}-proc XL winner failed DSL "
+                          f"verification")
     return errors
 
 
@@ -366,12 +497,27 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="paper-scale tuning + engine parity only "
                          "(the CI sim-smoke lane)")
+    ap.add_argument("--scale", action="store_true",
+                    help="run the 100k-proc scale suite (fold parity, "
+                         "16384-proc registry, 131072-proc XL) and merge "
+                         "it into --json")
     ap.add_argument("--json", default="BENCH_sim.json",
                     help="output path for the machine-readable results")
     args = ap.parse_args(argv)
 
-    result = run(chips=args.chips, quick=args.quick,
-                 scale_procs=args.scale_procs, json_path=args.json)
+    if args.scale:
+        # Merge into an existing full-run artifact when present, so the
+        # CI perf-regression lane sees one BENCH_sim.json with both.
+        path = Path(args.json) if args.json else None
+        result = (json.loads(path.read_text())
+                  if path is not None and path.exists() else {})
+        result["scale_suite"] = scale_suite()
+        if path is not None:
+            path.write_text(json.dumps(result, indent=2) + "\n")
+            print(f"wrote {path}")
+    else:
+        result = run(chips=args.chips, quick=args.quick,
+                     scale_procs=args.scale_procs, json_path=args.json)
     errors = check(result)
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)

@@ -110,7 +110,12 @@ def tune(selection, procs: int | None, report=print,
     """
     import time
 
-    from repro.search.tuner import report_lines, tune_app
+    from repro.search.tuner import (
+        feasible_procs,
+        nearest_feasible_procs,
+        report_lines,
+        tune_app,
+    )
 
     failures = []
     tuned = 0
@@ -120,6 +125,23 @@ def tune(selection, procs: int | None, report=print,
         if app.search_space is None:
             report(f"[{app.name}] no search space declared; skipping")
             continue
+        if procs is not None:
+            # Validate the requested scale up front against the cheap
+            # volume space — a count that factors into no feasible tile
+            # grid would otherwise surface as an opaque failure deep
+            # inside the search.
+            n = app.procs(procs)
+            if not feasible_procs(app.search_space, n):
+                near = nearest_feasible_procs(app.search_space, n)
+                hint = (f" (nearest valid: {', '.join(map(str, near))})"
+                        if near else "")
+                failures.append(
+                    f"{app.name}: --procs {n} does not factor into a "
+                    f"feasible tile grid for this app{hint}"
+                )
+                report(f"[{app.name}] --procs {n} infeasible; "
+                       f"skipping{hint}")
+                continue
         if time_domain:
             if getattr(app, "collective", None) is None:
                 report(f"[{app.name}] no collective pattern declared; "

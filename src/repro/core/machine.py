@@ -95,6 +95,14 @@ class MachineSpec:
         return tuple(reversed(strides))
 
     @property
+    def level_ports(self) -> tuple[int, ...]:
+        """Number of ports at each level, outermost first: one port per
+        level-(L+1) subtree, so ``nprocs // level_strides[L]``. Level 0 of
+        a (nodes, gpus) machine has ``nodes`` NICs, not ``nprocs``."""
+        n = self.nprocs
+        return tuple(n // s for s in self.level_strides)
+
+    @property
     def level_bws(self) -> tuple[float, ...]:
         """Per-level port bandwidth, outermost first (always full-rank)."""
         if self.link_bws is not None:

@@ -16,7 +16,12 @@ experiment with an actual search loop:
      (``sim.batch.canonical_assignment`` — identical port loads can
      never rank differently); when the cost model is time-domain (it
      exposes ``price_assignments``), the surviving beam's *actual*
-     placements are priced in one batched simulator call;
+     placements are priced in one batched simulator call — the batch
+     engine folds translation-symmetric schedule slabs to one
+     representative per candidate and re-prices only the slabs a beam
+     neighbor actually moved relative to its group's base candidate
+     (``sim.batch.FOLD_STATS`` counts both), so the sweep stays cheap
+     at 100k+ processors;
   4. rank by (placed seconds when simulated, else volume; then
      cross-node fraction) and render the winner back to Mapple DSL
      source, verifying the parsed source reproduces the winning
@@ -155,6 +160,40 @@ def _feasible_procs(space: SearchSpace, app, procs: int | None) -> tuple[int, st
     return app.default_procs, note
 
 
+def feasible_procs(space: SearchSpace, n: int) -> bool:
+    """True when at least one (grid, options) point of ``space`` prices at
+    ``n`` processors — the exact Phase-1 feasibility test, so callers can
+    validate a ``--procs`` request up front instead of failing deep
+    inside the search."""
+    grids = space.grids(n)
+    if not grids:
+        return False
+    for options in space.option_combos():
+        model = space.cost_model(n, dict(options))
+        for grid in grids:
+            try:
+                float(model.cost(grid))
+            except ValueError:
+                continue
+            return True
+    return False
+
+
+def nearest_feasible_procs(space: SearchSpace, n: int, *, count: int = 4,
+                           max_delta: int = 4096) -> list[int]:
+    """The ``count`` feasible processor counts nearest to ``n`` (within
+    ``n ± max_delta``, nearest first) — the actionable half of the CLI's
+    invalid ``--procs`` error."""
+    found: list[int] = []
+    for delta in range(1, max_delta + 1):
+        for m in (n - delta, n + delta):
+            if m >= 1 and feasible_procs(space, m):
+                found.append(m)
+        if len(found) >= count:
+            break
+    return found[:count]
+
+
 def tune_app(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
              leaderboard: int = DEFAULT_LEADERBOARD) -> TuningReport:
     """Search one application's mapper space; returns the full report."""
@@ -177,7 +216,10 @@ def tune_app(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
                 continue
             scored.append((volume, grid, options))
     if not scored:
-        raise ValueError(f"no feasible candidate for {app.name} at {n} procs")
+        near = nearest_feasible_procs(space, n, max_delta=256)
+        hint = f"; nearest feasible proc counts: {near}" if near else ""
+        raise ValueError(
+            f"no feasible candidate for {app.name} at {n} procs{hint}")
     scored.sort()
 
     # Phase 2: beam prune — a grid whose volume is dominated can never win,
@@ -376,6 +418,8 @@ __all__ = [
     "ScoredCandidate",
     "TuningReport",
     "cross_node_fraction",
+    "feasible_procs",
+    "nearest_feasible_procs",
     "report_lines",
     "tune_app",
     "tune_registry",

@@ -3,8 +3,9 @@
 Predicts per-step wall-clock time for a mapped application:
 
   ``topology``     hierarchical alpha-beta network from a MachineSpec
-                   (per-level latency/bandwidth, port contention; all-
-                   pairs LCA matrix + bucketed vectorized pricing)
+                   (per-level latency/bandwidth, port contention;
+                   stride-arithmetic routing + bucketed vectorized
+                   pricing, no processor-count ceiling)
   ``collectives``  wire schedules for the patterns the nine apps emit,
                    derived from the exact tile->processor assignment
                    (packed tile-space tensors, memoized expansion)

@@ -31,6 +31,19 @@ pricing is invariant under relabeling subtrees within a machine level
 (every port of a level shares one bandwidth), so placements that agree
 up to node / within-node processor renaming are *isomorphic* — the
 tuner dedups them before pricing.
+
+The same invariance powers the scaled pricing paths. When a schedule
+slab is a tile-grid *translation* of another (``PackedSchedule.fold_rep``
+— e.g. SUMMA's round-``r`` panel broadcast is round 0 shifted ``r``
+columns) and the candidate assignment is itself periodic under that
+shift (checked per candidate: the induced processor permutation must
+keep every machine level's subtrees intact), the translated slab's
+congestion price *is* the representative's, bit for bit — so hundreds of
+broadcast rounds price as a handful of representatives. Likewise a beam
+neighbor that moved only a few tiles re-prices only the slabs touching
+them, copying the rest from the stack's base candidate
+(``incremental``). Both shortcuts are exact, never approximations:
+``FOLD_STATS`` counts what was folded, reused, priced, or fell back.
 """
 from __future__ import annotations
 
@@ -50,6 +63,53 @@ from repro.sim.topology import Topology
 #: Cap on ``candidates_per_chunk * transfers`` for one gather/pricing
 #: pass, bounding peak memory of the (chunk, T) endpoint arrays.
 _MAX_GATHER_ELEMS = 1 << 24
+
+#: Instrumentation counters for the scaled pricing paths (reset with
+#: :func:`fold_stats_reset`; asserted by the symmetry property tests).
+#: A "pair" is one (candidate, unique-slab) congestion price.
+FOLD_STATS = {
+    "pairs_priced": 0,     # priced directly via Topology.bucket_times
+    "pairs_folded": 0,     # copied from a translation representative
+    "pairs_reused": 0,     # copied from the stack's base candidate
+    "fold_fallbacks": 0,   # candidates whose assignment broke a fold
+}
+
+
+def fold_stats_reset() -> None:
+    """Zero the :data:`FOLD_STATS` instrumentation counters."""
+    for key in FOLD_STATS:
+        FOLD_STATS[key] = 0
+
+
+def _divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def _is_permutation(flat: np.ndarray, nprocs: int) -> bool:
+    if flat.size != nprocs or flat.size == 0:
+        return False
+    if int(flat.min()) < 0 or int(flat.max()) >= nprocs:
+        return False
+    seen = np.zeros(nprocs, dtype=bool)
+    seen[flat] = True
+    return bool(seen.all())
+
+
+def _chunk_pairs(sizes: np.ndarray, cap: int) -> list[tuple[int, int]]:
+    """Split a pair list into contiguous chunks whose transfer totals stay
+    under ``cap`` (a single oversize pair still gets its own chunk)."""
+    if sizes.size == 0:
+        return []
+    csum = np.cumsum(sizes)
+    bounds = []
+    lo, base = 0, 0
+    while lo < sizes.size:
+        hi = int(np.searchsorted(csum, base + cap, side="right"))
+        hi = max(hi, lo + 1)
+        bounds.append((lo, hi))
+        base = int(csum[hi - 1])
+        lo = hi
+    return bounds
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,29 +150,161 @@ class BatchSimulator:
             )
         return a
 
-    def phase_durations(self, assignments: np.ndarray) -> np.ndarray:
+    # -------------------------------------------------- symmetry folding
+    def _shift_symmetric(self, agrid: np.ndarray, axis: int,
+                         step: int) -> bool:
+        """True when translating the tile grid ``step`` tiles along
+        ``axis`` (wraparound) maps this assignment onto a machine
+        symmetry: the induced processor permutation keeps every level's
+        subtrees intact, so every port's transfer list — and therefore
+        every congestion price — is unchanged bit for bit."""
+        a = agrid.reshape(-1)
+        b = np.roll(agrid, -step, axis=axis).reshape(-1)
+        inv = np.empty(a.size, dtype=np.int64)
+        inv[a] = np.arange(a.size, dtype=np.int64)
+        perm = b[inv]                    # processor permutation: b = perm∘a
+        for stride in self.topology.port_strides:
+            if stride == 1:
+                continue
+            blocks = (perm // stride).reshape(-1, stride)
+            if not (blocks == blocks[:, :1]).all():
+                return False
+        return True
+
+    def _axis_period(self, agrid: np.ndarray, axis: int) -> int:
+        """Smallest tile translation along ``axis`` that is a machine
+        symmetry of this assignment (compatible shifts compose, so every
+        multiple of the period folds too; the axis extent itself — only
+        the zero shift — when the assignment has no periodicity)."""
+        extent = agrid.shape[axis]
+        for q in _divisors(extent):
+            if q == extent or self._shift_symmetric(agrid, axis, q):
+                return q
+        return extent
+
+    def _plan(self, a: np.ndarray, fold: bool, incremental: bool
+              ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-(candidate, slab) pricing plan for a stack.
+
+        Returns ``(rep, unch, need)``, all shaped ``(N, n_unique)``:
+        ``rep[c, s]`` is the slab whose priced time slab ``s`` of
+        candidate ``c`` copies — its translation-class representative
+        under the candidate's own periodicities, ``s`` itself when it
+        must be priced; ``unch[c, s]`` marks slabs whose physical
+        transfers are identical to candidate 0's, so the base row's time
+        is reused (exact: same endpoint arrays, independent buckets);
+        ``need`` is the mask of pairs that go to ``bucket_times``. Both
+        shortcuts reproduce the dense result bit for bit, enforced by
+        tests/test_scale.py and the ``sim_eval --scale`` fold-parity
+        lane.
+        """
+        sched = self.schedule
+        n, u = a.shape[0], sched.n_unique
+        slab_ids = np.arange(u, dtype=np.int64)
+        rep = np.tile(slab_ids, (n, 1))
+        unch = np.zeros((n, u), dtype=bool)
+        frep, fshift = sched.fold_rep, sched.fold_shift
+        nprocs = self.topology.nprocs
+        foldable = (fold and (frep != slab_ids).any()
+                    and int(np.prod(sched.grid)) == nprocs)
+        if foldable:
+            axes = np.flatnonzero((fshift != 0).any(axis=0))
+            for c in range(n):
+                if not _is_permutation(a[c], nprocs):
+                    FOLD_STATS["fold_fallbacks"] += 1
+                    continue
+                agrid = a[c].reshape(sched.grid)
+                periods = {ax: self._axis_period(agrid, ax) for ax in axes}
+                # Slabs fold together when they share a class and their
+                # shifts agree modulo the candidate's per-axis periods.
+                cols = [frep] + [fshift[:, ax] % periods[ax] for ax in axes]
+                _, inverse = np.unique(np.stack(cols, axis=1), axis=0,
+                                       return_inverse=True)
+                inverse = inverse.reshape(-1)
+                first = np.full(int(inverse.max()) + 1, u, dtype=np.int64)
+                np.minimum.at(first, inverse, slab_ids)
+                rep[c] = first[inverse]
+                if (rep[c] != frep).any():
+                    FOLD_STATS["fold_fallbacks"] += 1
+        if incremental and n > 1:
+            changed = a[1:] != a[:1]
+            for c in range(1, n):
+                mask = changed[c - 1]
+                if mask.all():
+                    continue
+                if not mask.any():
+                    unch[c] = True
+                    continue
+                moved = mask[sched.src] | mask[sched.dst]
+                unch[c] = np.bincount(sched.phase_id[moved],
+                                      minlength=u) == 0
+        sizes = np.diff(sched.starts)
+        need = (rep == slab_ids[None, :]) & ~unch & (sizes > 0)[None, :]
+        FOLD_STATS["pairs_priced"] += int(need.sum())
+        FOLD_STATS["pairs_folded"] += int((rep != slab_ids[None, :]).sum())
+        FOLD_STATS["pairs_reused"] += int(
+            (unch & (rep == slab_ids[None, :])).sum())
+        return rep, unch, need
+
+    def _gather_pairs(self, a: np.ndarray, cc: np.ndarray, ss: np.ndarray
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 np.ndarray, int]:
+        """Endpoint/bucket arrays pricing the ``(cc, ss)`` candidate/slab
+        pairs: one bucket per pair, transfers in slab order (the same
+        accumulation order as the dense all-pairs pass, so the priced
+        values are bit-identical)."""
+        sched = self.schedule
+        sizes = np.diff(sched.starts)[ss]
+        total = int(sizes.sum())
+        cand = np.repeat(cc, sizes)
+        t_idx = (np.repeat(sched.starts[:-1][ss], sizes)
+                 + np.arange(total, dtype=np.int64)
+                 - np.repeat(np.cumsum(sizes) - sizes, sizes))
+        src = a[cand, sched.src[t_idx]]
+        dst = a[cand, sched.dst[t_idx]]
+        bucket = np.repeat(np.arange(cc.size, dtype=np.int64), sizes)
+        return src, dst, sched.nbytes[t_idx], bucket, int(cc.size)
+
+    def _fill_slabs(self, rep: np.ndarray, unch: np.ndarray,
+                    need: np.ndarray, values: np.ndarray) -> np.ndarray:
+        """Re-expand priced pair values to the full (N, n_unique) slab
+        times: scatter, resolve the base row's folds, copy base-identical
+        slabs, then broadcast every row's translation folds."""
+        n, u = need.shape
+        times = np.zeros((n, u), dtype=np.float64)
+        times[need] = values
+        times[0] = times[0][rep[0]]
+        if n > 1:
+            times = np.where(unch, times[0][None, :], times)
+            times = np.take_along_axis(times, rep, axis=1)
+        return times
+
+    def phase_durations(self, assignments: np.ndarray, *,
+                        fold: bool = True,
+                        incremental: bool = True) -> np.ndarray:
         """(N, n_phases) congestion-priced phase times, all candidates in
-        one bucketed pass. Only the schedule's *unique* transfer slabs are
-        priced (repeated rounds broadcast back over ``phase_map``), and
-        candidates are chunked to bound the gather footprint."""
+        one bucketed pass. Only the schedule's *unique* transfer slabs
+        are priced (repeated rounds broadcast back over ``phase_map``),
+        and of those only one translation representative per candidate
+        symmetry class (``fold``) and only the slabs whose placements
+        differ from candidate 0's (``incremental``) — both copies are
+        bit-exact, so disabling the flags changes nothing but speed.
+        Gathers are chunked to bound peak memory."""
         a = self._flat_assignments(assignments)
         n, sched = a.shape[0], self.schedule
         u, t = sched.n_unique, sched.n_transfers
         if t == 0 or n == 0 or sched.n_phases == 0:
             return np.zeros((n, sched.n_phases), dtype=np.float64)
-        slab_times = np.zeros((n, u), dtype=np.float64)
-        chunk = max(1, _MAX_GATHER_ELEMS // t)
-        for lo in range(0, n, chunk):
-            sub = a[lo:lo + chunk]
-            m = sub.shape[0]
-            src = sub[:, sched.src]
-            dst = sub[:, sched.dst]
-            nbytes = np.broadcast_to(sched.nbytes, (m, t))
-            bucket = (np.arange(m, dtype=np.int64)[:, None] * u
-                      + sched.phase_id[None, :])
-            slab_times[lo:lo + m] = self.topology.bucket_times(
-                src, dst, nbytes, bucket, m * u,
-            ).reshape(m, u)
+        rep, unch, need = self._plan(a, fold, incremental)
+        cc, ss = np.nonzero(need)
+        values = np.empty(cc.size, dtype=np.float64)
+        sizes = np.diff(sched.starts)[ss]
+        for lo, hi in _chunk_pairs(sizes, _MAX_GATHER_ELEMS):
+            src, dst, nbytes, bucket, nb = self._gather_pairs(
+                a, cc[lo:hi], ss[lo:hi])
+            values[lo:hi] = self.topology.bucket_times(
+                src, dst, nbytes, bucket, nb)
+        slab_times = self._fill_slabs(rep, unch, need, values)
         return slab_times[:, sched.phase_map]
 
     def _close_steps(self, durations: np.ndarray) -> np.ndarray:
@@ -128,10 +320,12 @@ class BatchSimulator:
             return self.compute_s + comm
         return np.maximum(self.compute_s, comm)
 
-    def step_times(self, assignments: np.ndarray) -> np.ndarray:
+    def step_times(self, assignments: np.ndarray, *, fold: bool = True,
+                   incremental: bool = True) -> np.ndarray:
         """(N,) steady-state seconds per step — the closed form of
         ``simulate_steps(...).per_step_time()`` for a constant schedule."""
-        return self._close_steps(self.phase_durations(assignments))
+        return self._close_steps(self.phase_durations(
+            assignments, fold=fold, incremental=incremental))
 
     def step_time(self, assignment: np.ndarray) -> float:
         """Seconds per step of a single placement."""
@@ -139,8 +333,9 @@ class BatchSimulator:
             np.asarray(assignment, dtype=np.int64).reshape(1, -1))[0])
 
 
-def price_stacks(stacks: Sequence[tuple["BatchSimulator", np.ndarray]]
-                 ) -> list[np.ndarray]:
+def price_stacks(stacks: Sequence[tuple["BatchSimulator", np.ndarray]],
+                 *, fold: bool = True,
+                 incremental: bool = True) -> list[np.ndarray]:
     """Step times for several (engine, assignment-stack) groups in as few
     congestion passes as possible.
 
@@ -148,66 +343,72 @@ def price_stacks(stacks: Sequence[tuple["BatchSimulator", np.ndarray]]
     different buckets came from different schedules, so a whole tuner
     beam — every shortlisted grid's surviving variants, across option
     points — prices in one ``candidates x phases x ports`` sweep as long
-    as the groups share a topology. Groups are greedily packed into
-    passes bounded by the gather ceiling; an oversized single group falls
-    back to its own (internally chunked) :meth:`BatchSimulator.step_times`.
+    as the groups share a topology. Each group is first *planned*
+    (:meth:`BatchSimulator._plan`): symmetry-folded and base-identical
+    slabs are dropped from the gather and reconstructed bit-exactly
+    afterwards, so only the irreducible pairs hit the congestion pass.
+    Groups are greedily packed into passes bounded by the gather ceiling;
+    an oversized single group falls back to its own (internally chunked)
+    :meth:`BatchSimulator.step_times`.
     """
     out: list[np.ndarray | None] = [None] * len(stacks)
+    prepared: list[tuple] = []
+    for i, (engine, assigns) in enumerate(stacks):
+        a = engine._flat_assignments(assigns)
+        sched = engine.schedule
+        if (a.shape[0] == 0 or sched.n_phases == 0
+                or sched.n_transfers == 0
+                or a.shape[0] * sched.n_transfers > _MAX_GATHER_ELEMS):
+            out[i] = engine.step_times(a, fold=fold, incremental=incremental)
+            continue
+        rep, unch, need = engine._plan(a, fold, incremental)
+        cc, ss = np.nonzero(need)
+        elems = int(np.diff(sched.starts)[ss].sum())
+        prepared.append((i, a, rep, unch, need, cc, ss, elems))
     runs: list[list[int]] = []
     run: list[int] = []
     run_elems = 0
-    for i, (engine, assigns) in enumerate(stacks):
-        a = engine._flat_assignments(assigns)
-        elems = a.shape[0] * max(engine.schedule.n_transfers, 1)
-        same_topo = (not run
-                     or stacks[run[0]][0].topology == engine.topology)
-        if run and (run_elems + elems > _MAX_GATHER_ELEMS or not same_topo):
+    for j, item in enumerate(prepared):
+        engine = stacks[item[0]][0]
+        same_topo = (not run or stacks[prepared[run[0]][0]][0].topology
+                     == engine.topology)
+        if run and (run_elems + item[-1] > _MAX_GATHER_ELEMS
+                    or not same_topo):
             runs.append(run)
             run, run_elems = [], 0
-        if elems > _MAX_GATHER_ELEMS:
-            out[i] = engine.step_times(assigns)
-            continue
-        run.append(i)
-        run_elems += elems
+        run.append(j)
+        run_elems += item[-1]
     if run:
         runs.append(run)
     for run in runs:
-        if len(run) == 1:
-            i = run[0]
-            out[i] = stacks[i][0].step_times(stacks[i][1])
-            continue
-        topo = stacks[run[0]][0].topology
-        srcs, dsts, nbytes, buckets = [], [], [], []
-        offsets = []
-        total_buckets = 0
-        for i in run:
-            engine, assigns = stacks[i]
-            a = engine._flat_assignments(assigns)
-            m, sched = a.shape[0], engine.schedule
-            u, t = sched.n_unique, sched.n_transfers
-            offsets.append((i, total_buckets, m, u))
-            if t:
-                srcs.append(a[:, sched.src].reshape(-1))
-                dsts.append(a[:, sched.dst].reshape(-1))
-                nbytes.append(np.broadcast_to(
-                    sched.nbytes, (m, t)).reshape(-1))
-                buckets.append(
-                    (total_buckets
-                     + np.arange(m, dtype=np.int64)[:, None] * u
-                     + sched.phase_id[None, :]).reshape(-1))
-            total_buckets += m * u
+        topo = stacks[prepared[run[0]][0]][0].topology
+        srcs, dsts, nbs, buckets = [], [], [], []
+        offs = []
+        total = 0
+        for j in run:
+            i, a, rep, unch, need, cc, ss, _ = prepared[j]
+            engine = stacks[i][0]
+            src, dst, nb, bucket, npairs = engine._gather_pairs(a, cc, ss)
+            srcs.append(src)
+            dsts.append(dst)
+            nbs.append(nb)
+            buckets.append(bucket + total)
+            offs.append((j, total, npairs))
+            total += npairs
         times = topo.bucket_times(
             np.concatenate(srcs) if srcs else np.empty(0, np.int64),
             np.concatenate(dsts) if dsts else np.empty(0, np.int64),
-            np.concatenate(nbytes) if nbytes else np.empty(0, np.float64),
+            np.concatenate(nbs) if nbs else np.empty(0, np.float64),
             np.concatenate(buckets) if buckets else np.empty(0, np.int64),
-            total_buckets,
+            total,
         )
-        for i, off, m, u in offsets:
+        for j, off, npairs in offs:
+            i, a, rep, unch, need, cc, ss, _ = prepared[j]
             engine = stacks[i][0]
-            durations = times[off:off + m * u].reshape(m, u)[
-                :, engine.schedule.phase_map]
-            out[i] = engine._close_steps(durations)
+            slab_times = engine._fill_slabs(rep, unch, need,
+                                            times[off:off + npairs])
+            out[i] = engine._close_steps(
+                slab_times[:, engine.schedule.phase_map])
     return [np.asarray(o) for o in out]
 
 
@@ -272,6 +473,9 @@ def _appearance_rank(values: np.ndarray) -> np.ndarray:
 
 __all__ = [
     "BatchSimulator",
+    "FOLD_STATS",
     "batch_simulator",
     "canonical_assignment",
+    "fold_stats_reset",
+    "price_stacks",
 ]

@@ -95,6 +95,15 @@ class PackedSchedule:
     src: np.ndarray           # (T,) flat tile indices
     dst: np.ndarray
     nbytes: np.ndarray        # (T,) payload bytes
+    #: Translation-symmetry metadata: slab ``u`` is, elementwise, slab
+    #: ``fold_rep[u]`` with every endpoint translated by ``fold_shift[u]``
+    #: tiles along each grid axis (wraparound). The batched engine prices
+    #: one representative per translation class and copies the time to
+    #: the translated members whenever the candidate assignment is itself
+    #: periodic under those shifts (``repro.sim.batch``). Representatives
+    #: point at themselves with a zero shift.
+    fold_rep: np.ndarray      # (n_unique,) representative slab index
+    fold_shift: np.ndarray    # (n_unique, len(grid)) tile shift from rep
 
     @property
     def n_phases(self) -> int:
@@ -490,6 +499,52 @@ _BUILDERS = {
 }
 
 
+def schedule_transfer_bound(pattern: CollectivePattern,
+                            grid: Sequence[int]) -> int:
+    """Upper bound on the total transfer count of ``pattern``'s packed
+    schedule on ``grid``, in O(1) — without building it.
+
+    The bound is the exact pre-dedup count each builder emits before
+    :func:`_phase` drops same-processor transfers, so the real schedule
+    is never larger. ``SimulatedTimeCostModel`` consults this to reject
+    candidate grids whose schedule would be prohibitively large to even
+    materialize (a skewed panel grid at 100k+ procs runs to hundreds of
+    millions of transfers) before paying the build. Kept adjacent to
+    ``_BUILDERS`` so formula and builder evolve together; a property
+    test asserts bound >= the built schedule's ``n_transfers`` for every
+    registry pattern.
+    """
+    grid = tuple(int(g) for g in grid)
+    total = int(np.prod(grid)) if grid else 0
+    kind = pattern.kind
+    if kind == "halo":
+        return 2 * sum(1 for g in grid if g > 1) * total
+    if kind == "shift":
+        return 2 * max(grid[0] - 1, 0) * total
+    if kind == "panel_broadcast":
+        pr, pc = grid
+        return max(pr, pc) * (pr * (pc - 1) + pc * (pr - 1))
+    if kind == "bcast_reduce_3d":
+        q1, q2, q3 = grid
+        return q1 * q3 * (q2 - 1) + q2 * q3 * (q1 - 1) + q1 * q2 * (q3 - 1)
+    if kind == "replicated_shift":
+        q, _, c = grid
+        shifts = 2 * max(q // max(c, 1) - 1, 0) * total
+        repl = 2 * q * q * max(c - 1, 0)     # replAB bcast + reduceC
+        return shifts + repl
+    if kind == "gather_scatter":
+        # 2(p-1) ring rounds, but every round shares one endpoint array
+        # (see _ring_phases), so the packed schedule holds two unique
+        # slabs of p transfers each.
+        return 2 * total
+    if kind == "alltoall":
+        return total * total
+    raise ValueError(
+        f"no transfer bound for pattern kind {pattern.kind!r}; "
+        f"known: {sorted(_BUILDERS)}"
+    )
+
+
 # --------------------------------------------------------- packed expansion
 def _hashable(v):
     if isinstance(v, (list, tuple)):
@@ -540,12 +595,22 @@ def packed_schedule(pattern: CollectivePattern, grid: Sequence[int], *,
     phases = builder(pattern, grid, identity, elem_bytes)
     # Collapse phases with identical transfer sets (a ring's p-1 repeated
     # rounds, systolic shift repeats) into one unique slab each; pricing
-    # runs per slab and broadcasts back over phase_map.
+    # runs per slab and broadcasts back over phase_map. Digests are
+    # memoized by array identity — repeated rounds share their endpoint
+    # arrays, so a p-round ring hashes its transfers once, not p times.
+    arr_digests: dict[int, bytes] = {}
+
+    def _digest(arr: np.ndarray) -> bytes:
+        d = arr_digests.get(id(arr))
+        if d is None:
+            d = arr_digests[id(arr)] = arr.tobytes()
+        return d
+
     slab_of: dict[tuple, int] = {}
     phase_map = np.empty(len(phases), dtype=np.int64)
     unique: list[Phase] = []
     for p, ph in enumerate(phases):
-        digest = (ph.src.tobytes(), ph.dst.tobytes(), ph.nbytes.tobytes())
+        digest = (_digest(ph.src), _digest(ph.dst), _digest(ph.nbytes))
         slab = slab_of.get(digest)
         if slab is None:
             slab = slab_of[digest] = len(unique)
@@ -563,14 +628,63 @@ def packed_schedule(pattern: CollectivePattern, grid: Sequence[int], *,
         dst = np.empty(0, np.int64)
         nbytes = np.empty(0, np.float64)
     phase_id = np.repeat(np.arange(len(unique), dtype=np.int64), sizes)
-    _freeze(phase_map, starts, phase_id, src, dst, nbytes)
+    fold_rep, fold_shift = _fold_metadata(grid, starts, src, dst, nbytes)
+    _freeze(phase_map, starts, phase_id, src, dst, nbytes,
+            fold_rep, fold_shift)
     packed = PackedSchedule(
         grid=grid,
         labels=tuple(ph.label for ph in phases),
         phase_map=phase_map,
         starts=starts, phase_id=phase_id, src=src, dst=dst, nbytes=nbytes,
+        fold_rep=fold_rep, fold_shift=fold_shift,
     )
     return _memo_put(_PACKED_CACHE, key, packed, _PACKED_CACHE_MAX)
+
+
+def _fold_metadata(grid: tuple[int, ...], starts: np.ndarray,
+                   src: np.ndarray, dst: np.ndarray, nbytes: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Group the unique slabs into tile-translation classes.
+
+    Two slabs are in one class when their transfer lists are equal
+    elementwise up to a single per-axis wraparound translation of every
+    endpoint (identical payloads, identical src->dst coordinate deltas,
+    and src coordinates offset by one constant vector). A SUMMA panel
+    broadcast's round-``r`` slab is the round-0 slab translated ``r``
+    columns over, so hundreds of rounds collapse to a handful of
+    classes; pricing-time symmetry checks then decide per candidate
+    whether the translation is also a machine symmetry.
+    """
+    n_unique = int(starts.size) - 1
+    rank = len(grid)
+    fold_rep = np.arange(n_unique, dtype=np.int64)
+    fold_shift = np.zeros((n_unique, rank), dtype=np.int64)
+    if n_unique == 0 or src.size == 0:
+        return fold_rep, fold_shift
+    gridarr = np.asarray(grid, dtype=np.int64)
+    sc = np.unravel_index(src, grid)
+    dc = np.unravel_index(dst, grid)
+    delta = [(d - s) % g for s, d, g in zip(sc, dc, gridarr)]
+    # class key: payload bytes + coordinate deltas, both elementwise.
+    classes: dict[tuple, list[int]] = {}
+    for u in range(n_unique):
+        lo, hi = int(starts[u]), int(starts[u + 1])
+        if lo == hi:
+            continue
+        digest = (nbytes[lo:hi].tobytes(),
+                  b"".join(d[lo:hi].tobytes() for d in delta))
+        candidates = classes.setdefault(digest, [])
+        for rep in candidates:
+            rlo = int(starts[rep])
+            off = [(s[lo] - s[rlo]) % g for s, g in zip(sc, gridarr)]
+            if all(((s[lo:hi] - s[rlo:rlo + hi - lo] - o) % g == 0).all()
+                   for s, o, g in zip(sc, off, gridarr)):
+                fold_rep[u] = rep
+                fold_shift[u] = off
+                break
+        else:
+            candidates.append(u)
+    return fold_rep, fold_shift
 
 
 def expand_packed(packed: PackedSchedule, assignment: np.ndarray
@@ -634,6 +748,7 @@ __all__ = [
     "ring_allreduce",
     "ring_reduce_scatter",
     "schedule_cache_clear",
+    "schedule_transfer_bound",
     "tree_allreduce",
     "tree_broadcast",
     "tree_reduce",

@@ -32,12 +32,26 @@ import numpy as np
 from repro.core.commvolume import CostModel
 from repro.core.machine import GPU, MachineSpec
 from repro.sim.batch import BatchSimulator, batch_simulator
-from repro.sim.collectives import CollectivePattern, Phase, build_phases
+from repro.sim.collectives import (
+    CollectivePattern,
+    Phase,
+    build_phases,
+    schedule_transfer_bound,
+)
 from repro.sim.engine import Timeline, simulate_steps
 from repro.sim.topology import Topology
 
 DEFAULT_STEPS = 3
 DEFAULT_ELEM_BYTES = 4
+
+# Candidate grids whose packed schedule would exceed this many wire
+# transfers are rejected by SimulatedTimeCostModel with ValueError (the
+# same channel volume infeasibility uses), so the tuner never pays a
+# multi-GB schedule build for a grid that cannot win. 2^23 transfers is
+# ~2s of build; every grid of every registry app at <= 1024 procs is
+# orders of magnitude below it (max ~1M), so paper-scale behavior is
+# unchanged, while a (1, 16384) panel grid (~2.7e8 transfers) is pruned.
+MAX_SCHEDULE_TRANSFERS = 1 << 23
 
 
 def spec_for(machine_shape: Sequence[int], kind: str = GPU) -> MachineSpec:
@@ -172,6 +186,14 @@ class SimulatedTimeCostModel(CostModel):
         if int(np.prod(grid)) != self.spec.nprocs:
             raise ValueError(
                 f"grid {grid} does not cover {self.spec.nprocs} processors"
+            )
+        bound = schedule_transfer_bound(self.pattern, grid)
+        if bound > MAX_SCHEDULE_TRANSFERS:
+            raise ValueError(
+                f"grid {grid} expands to ~{bound:.2g} wire transfers per "
+                f"step (> {MAX_SCHEDULE_TRANSFERS}); too large to "
+                f"simulate — such a skewed decomposition is never "
+                f"time-competitive at this scale"
             )
         return grid
 
@@ -391,6 +413,7 @@ def time_tuned_app(app, *, steps: int = DEFAULT_STEPS,
 __all__ = [
     "DEFAULT_ELEM_BYTES",
     "DEFAULT_STEPS",
+    "MAX_SCHEDULE_TRANSFERS",
     "SimReport",
     "SimulatedTimeCostModel",
     "default_assignment",

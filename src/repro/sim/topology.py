@@ -20,13 +20,15 @@ the max over ports of ``n_msgs * alpha + port_bytes / beta`` — the
 standard congestion (max-load) alpha-beta cost used by static mapping
 cost models.
 
-The hot path is fully array-programmed: crossing levels come from a
-precomputed all-pairs LCA-level matrix (one ``int8`` gather per transfer
-instead of per-transfer coordinate walks), and congestion pricing is a
-single bincount / ``np.add.reduceat`` pass over an arbitrary *bucket*
-axis — one bucket per phase for the event engine, ``candidates x
-phases`` buckets for the batched engine (``repro.sim.batch``) — so
-thousands of phases across a whole tuner beam are priced in one call.
+The hot path is fully array-programmed: crossing levels are pure
+stride arithmetic on flat processor ids (``src // stride[L] != dst //
+stride[L]`` — no precomputed all-pairs table, so there is no processor
+ceiling), and congestion pricing is a single bincount /
+``np.add.reduceat`` pass over an arbitrary *bucket* axis — one bucket
+per phase for the event engine, ``candidates x phases`` buckets for the
+batched engine (``repro.sim.batch``) — so thousands of phases across a
+whole tuner beam are priced in one call, at 1024 or 131072 processors
+alike.
 """
 from __future__ import annotations
 
@@ -48,62 +50,11 @@ from repro.core.machine import MachineSpec
 DEFAULT_ALPHA_OUTER = 2e-7      # seconds, inter-node message setup
 DEFAULT_ALPHA_INNER = 5e-8      # seconds, intra-node / on-fabric setup
 
-#: Above this processor count the all-pairs LCA matrix (nprocs^2 int8)
-#: is not materialized; crossing levels fall back to the coordinate
-#: comparison. 8192 procs -> 64 MiB, the largest worth caching.
-LCA_MATRIX_MAX_PROCS = 8192
-
 #: Dense-bincount ceiling for congestion pricing: when
 #: ``n_buckets * n_ports`` exceeds this, the sparse sorted-key
 #: ``np.add.reduceat`` path is used instead (same float results —
 #: both sum each port's bytes in transfer order).
 _DENSE_PORT_CELLS = 1 << 23
-
-#: FIFO bound on cached LCA matrices — entries near the processor
-#: ceiling are tens of MiB, so a long-lived process sweeping machine
-#: shapes must not accumulate them without eviction.
-_LCA_CACHE_MAX = 16
-
-_LCA_CACHE: dict[tuple[int, ...], np.ndarray] = {}
-
-
-def lca_level_matrix(shape: Sequence[int]) -> np.ndarray:
-    """All-pairs crossing-level matrix for a machine shape (cached).
-
-    ``M[p, q]`` is the outermost level where the row-major coordinates of
-    processors ``p`` and ``q`` differ, and ``len(shape)`` on the diagonal
-    (a local copy that never touches the network). ``int8`` — one byte
-    per processor pair.
-    """
-    shape = tuple(int(s) for s in shape)
-    cached = _LCA_CACHE.get(shape)
-    if cached is not None:
-        return cached
-    n = int(np.prod(shape))
-    if n > LCA_MATRIX_MAX_PROCS:
-        raise ValueError(
-            f"{n} processors exceeds the {LCA_MATRIX_MAX_PROCS} LCA-matrix "
-            f"ceiling; use coordinate crossing levels instead"
-        )
-    k = len(shape)
-    # Built level by level, innermost first, so the outermost differing
-    # coordinate overwrites last — peak transient memory is one (n, n)
-    # bool per pass rather than (n, n, k) + int64 intermediates.
-    mat = np.full((n, n), k, dtype=np.int8)
-    coords = np.unravel_index(np.arange(n), shape)
-    for lvl in range(k - 1, -1, -1):
-        c = coords[lvl]
-        mat[c[:, None] != c[None, :]] = lvl
-    mat.setflags(write=False)
-    _LCA_CACHE[shape] = mat
-    while len(_LCA_CACHE) > _LCA_CACHE_MAX:
-        _LCA_CACHE.pop(next(iter(_LCA_CACHE)))
-    return mat
-
-
-def lca_cache_clear() -> None:
-    """Drop all cached LCA matrices (tests / memory-sensitive sweeps)."""
-    _LCA_CACHE.clear()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,17 +104,24 @@ class Topology:
     def crossing_levels(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
         """Outermost level where src and dst coordinates differ (the fabric
         the message crosses); ``k`` (= number of levels) for src == dst,
-        i.e. a local copy that never touches the network."""
+        i.e. a local copy that never touches the network.
+
+        Pure stride arithmetic — ``src // stride[L]`` is the flat index
+        of the level-(L+1) subtree, and subtree indices differ exactly
+        from the outermost differing coordinate inward, so sweeping the
+        levels innermost-first and overwriting leaves the outermost
+        match. O(k) vectorized ops per call, no precomputed table and no
+        processor-count ceiling.
+        """
         src = np.asarray(src, dtype=np.int64)
         dst = np.asarray(dst, dtype=np.int64)
-        if self.nprocs <= LCA_MATRIX_MAX_PROCS:
-            return lca_level_matrix(self.spec.shape)[src, dst]
-        cs, cd = self.coords(src), self.coords(dst)
-        diff = cs != cd
-        k = diff.shape[-1]
-        # argmax finds the first True; all-False rows (same proc) map to k.
-        first = np.argmax(diff, axis=-1)
-        return np.where(diff.any(axis=-1), first, k)
+        k = len(self.spec.shape)
+        out = np.full(np.broadcast_shapes(src.shape, dst.shape), k,
+                      dtype=np.int64)
+        for lvl in range(k - 1, -1, -1):
+            s = self.spec.level_strides[lvl]
+            np.copyto(out, lvl, where=(src // s) != (dst // s))
+        return out
 
     def transfer_time(self, nbytes: float, level: int) -> float:
         """Uncontended point-to-point time for one message at one level."""
@@ -215,7 +173,7 @@ class Topology:
         # level contributes only its true port count (level 0 of a
         # (nodes, gpus) machine has `nodes` NICs, not `nprocs`).
         strides = np.asarray(self.port_strides, dtype=np.int64)
-        nports = self.nprocs // strides                   # per level
+        nports = np.asarray(self.spec.level_ports, dtype=np.int64)
         per_lvl = 2 * n_buckets * nports
         offsets = np.r_[0, np.cumsum(per_lvl)]
         cells = int(offsets[-1])
@@ -302,8 +260,5 @@ class Topology:
 __all__ = [
     "DEFAULT_ALPHA_INNER",
     "DEFAULT_ALPHA_OUTER",
-    "LCA_MATRIX_MAX_PROCS",
     "Topology",
-    "lca_cache_clear",
-    "lca_level_matrix",
 ]

@@ -1,0 +1,213 @@
+"""Scale-path properties: symmetry folding, incremental re-pricing, and
+the schedule-size guard.
+
+The batched engine's folded/incremental fast paths must be *bit-equal*
+to dense pricing — they skip work only when the skipped slab's port
+loads are provably identical floats, so any divergence at all is a bug.
+These tests drive the equality across random machine shapes, the full
+registry, adversarial (symmetry-free) placements where folding must
+fall back, and single-op placement edits where incremental reuse must
+fire.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro import apps
+from repro.core.machine import MachineSpec
+from repro.search.space import build_program
+from repro.search.tuner import feasible_procs, nearest_feasible_procs
+from repro.sim.batch import (
+    FOLD_STATS,
+    batch_simulator,
+    fold_stats_reset,
+)
+from repro.sim.collectives import (
+    CollectivePattern,
+    packed_schedule,
+    schedule_transfer_bound,
+)
+from repro.sim.cost import (
+    MAX_SCHEDULE_TRANSFERS,
+    spec_for,
+    time_search_space,
+)
+
+MATMUL = {"m": 4096, "n": 4096, "k": 4096}
+
+
+def _spec(shape):
+    names = tuple(f"l{i}" for i in range(len(shape)))
+    return MachineSpec(shape=tuple(shape), level_names=names)
+
+
+def _sim(pattern, spec, grid):
+    return batch_simulator(pattern, spec, grid, step_flops=1e9)
+
+
+def _dense(sim, stack):
+    return sim.step_times(stack, fold=False, incremental=False)
+
+
+# ------------------------------------------------------------- fold parity
+@pytest.mark.parametrize("shape,grid", [
+    ((4, 4), (4, 4)),
+    ((2, 8), (4, 4)),
+    ((16,), (4, 4)),
+    ((2, 2, 4), (4, 4)),
+    ((3, 2, 5), (5, 6)),
+    ((2, 32), (8, 8)),
+])
+def test_folded_pricing_bit_equal_across_machine_shapes(shape, grid):
+    """Folded == dense, bit for bit, whatever the machine hierarchy —
+    on the symmetric default placement (folds fire) and on random
+    permutations (folds fall back per candidate)."""
+    spec = _spec(shape)
+    pattern = CollectivePattern("panel_broadcast", MATMUL)
+    sim = _sim(pattern, spec, grid)
+    rng = np.random.default_rng(int(np.prod(shape)))
+    n = spec.nprocs
+    rows = [np.arange(n, dtype=np.int64)]
+    rows += [rng.permutation(n) for _ in range(3)]
+    stack = np.stack(rows)
+    assert np.array_equal(sim.step_times(stack), _dense(sim, stack))
+
+
+def test_folding_fires_on_symmetric_placement():
+    spec = _spec((2, 32))
+    sim = _sim(CollectivePattern("panel_broadcast", MATMUL), spec, (8, 8))
+    fold_stats_reset()
+    a = np.arange(64, dtype=np.int64)[None, :]
+    dense = _dense(sim, a)
+    assert FOLD_STATS["pairs_folded"] == 0     # dense path never folds
+    fold_stats_reset()
+    assert np.array_equal(sim.step_times(a), dense)
+    assert FOLD_STATS["pairs_folded"] > 0
+    assert FOLD_STATS["pairs_priced"] < dense.size * sim.schedule.n_unique
+
+
+def test_adversarial_placements_fall_back_and_stay_exact():
+    """A placement with no translation symmetry must be priced densely
+    (the fallback counter proves the fold was attempted and refused),
+    and the result must still equal dense pricing bit for bit."""
+    spec = _spec((2, 32))
+    sim = _sim(CollectivePattern("panel_broadcast", MATMUL), spec, (8, 8))
+    rng = np.random.default_rng(7)
+    stack = np.stack([rng.permutation(64) for _ in range(4)])
+    fold_stats_reset()
+    folded = sim.step_times(stack)
+    assert FOLD_STATS["fold_fallbacks"] > 0
+    assert np.array_equal(folded, _dense(sim, stack))
+
+
+def test_non_bijective_placement_falls_back_and_stays_exact():
+    spec = _spec((2, 32))
+    sim = _sim(CollectivePattern("panel_broadcast", MATMUL), spec, (8, 8))
+    a = np.arange(64, dtype=np.int64)
+    a[1] = a[0]                                # collision: not a permutation
+    fold_stats_reset()
+    folded = sim.step_times(a[None, :])
+    assert FOLD_STATS["fold_fallbacks"] > 0
+    assert np.array_equal(folded, _dense(sim, a[None, :]))
+
+
+def test_folded_pricing_bit_equal_for_every_registry_app():
+    """Default placement + every bijective tuner variant of every
+    registry app: folded/incremental == dense bit for bit."""
+    procs = 256
+    for app in apps.iter_apps():
+        n = procs if app.search_space.grids(procs) else app.default_procs
+        shape = tuple(int(s) for s in app.machine_shape(n))
+        sp = time_search_space(app)
+        for opts in app.search_space.option_combos():
+            model = sp.cost_model(n, dict(opts))
+            for grid in app.search_space.grids(n)[:4]:
+                try:
+                    model._validate(grid)
+                except ValueError:
+                    continue
+                cands = [model._default_assignment(grid)]
+                for c in app.search_space.variants(grid, tuple(opts), shape):
+                    prog = build_program(shape, c, "scale_test")
+                    a = prog.mapper.assignment_grid(c.grid, use_cache=False)
+                    if len(np.unique(a.reshape(-1))) == n:
+                        cands.append(np.asarray(a))
+                stack = np.stack(cands)
+                sim = model.batch(grid)
+                assert np.array_equal(sim.step_times(stack),
+                                      _dense(sim, stack)), \
+                    f"{app.name} {grid} {opts}"
+            break  # one option combo per app keeps the sweep fast
+
+
+# ------------------------------------------------------- incremental reuse
+def test_incremental_reuse_bit_equal_over_one_op_edits():
+    """Rows that differ from the base placement by one local edit only
+    re-price the slabs the edit touches; results must equal pricing
+    every row in isolation."""
+    spec = _spec((8, 8))
+    sim = _sim(CollectivePattern("panel_broadcast", MATMUL), spec, (8, 8))
+    rng = np.random.default_rng(11)
+    base = np.arange(64, dtype=np.int64)
+    rows = [base]
+    for _ in range(5):
+        edit = base.copy()
+        i, j = rng.choice(64, size=2, replace=False)
+        edit[i], edit[j] = edit[j], edit[i]    # one-op move: swap two tiles
+        rows.append(edit)
+    stack = np.stack(rows)
+    fold_stats_reset()
+    got = sim.step_times(stack)
+    assert FOLD_STATS["pairs_reused"] > 0
+    want = np.concatenate([sim.step_times(r[None, :]) for r in stack])
+    assert np.array_equal(got, want)
+
+
+def test_incremental_identical_rows_reuse_everything():
+    spec = _spec((8, 8))
+    sim = _sim(CollectivePattern("panel_broadcast", MATMUL), spec, (8, 8))
+    stack = np.tile(np.arange(64, dtype=np.int64), (3, 1))
+    fold_stats_reset()
+    got = sim.step_times(stack)
+    assert FOLD_STATS["pairs_reused"] > 0
+    assert got[0] == got[1] == got[2]
+    assert np.array_equal(got, _dense(sim, stack))
+
+
+# ------------------------------------------------------ schedule size guard
+def test_transfer_bound_dominates_built_schedules():
+    """The O(1) bound must never under-count the schedule it guards."""
+    for app in apps.iter_apps():
+        n = 64 if app.search_space.grids(64) else app.default_procs
+        for grid in app.search_space.grids(n)[:6]:
+            bound = schedule_transfer_bound(app.collective, grid)
+            built = packed_schedule(app.collective, grid)
+            assert bound >= built.n_transfers, (app.name, grid)
+
+
+def test_transfer_bound_unknown_kind_raises():
+    with pytest.raises(ValueError, match="transfer bound"):
+        schedule_transfer_bound(CollectivePattern("mystery", {}), (4, 4))
+
+
+def test_cost_model_rejects_oversized_schedules():
+    """A skewed panel grid at 16384 procs expands to ~2.7e8 transfers;
+    the time model must refuse it as infeasible instead of building it."""
+    app = next(a for a in apps.iter_apps() if a.name == "summa")
+    model = time_search_space(app).cost_model(16384, {})
+    bound = schedule_transfer_bound(app.collective, (1, 16384))
+    assert bound > MAX_SCHEDULE_TRANSFERS
+    with pytest.raises(ValueError, match="transfers"):
+        model.cost((1, 16384))
+    assert model.cost((128, 128)) > 0.0        # the square grid still prices
+
+
+# --------------------------------------------------------- procs validation
+def test_feasible_procs_helpers():
+    app = next(a for a in apps.iter_apps() if a.name == "cannon")
+    assert feasible_procs(app.search_space, 1024)
+    assert not feasible_procs(app.search_space, 1000)
+    near = nearest_feasible_procs(app.search_space, 1000)
+    assert near and near[0] in (961, 1024)
+    assert all(feasible_procs(app.search_space, m) for m in near)

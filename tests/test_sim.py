@@ -41,7 +41,7 @@ from repro.sim.cost import (
     time_tuned_app,
 )
 from repro.sim.engine import Task, simulate_steps, simulate_tasks
-from repro.sim.topology import Topology, lca_level_matrix
+from repro.sim.topology import Topology
 
 STENCIL_LENGTHS = (1024, 8192)
 
@@ -423,19 +423,19 @@ def _both_engines(pattern, spec, grid, assign, *, step_flops=1e12,
 HALO22 = CollectivePattern("halo", {"lengths": (64, 64)})
 
 
-def test_lca_matrix_matches_coordinate_walk():
-    for shape in [(2, 4), (8,), (1, 4), (4, 1), (2, 2, 2)]:
+def test_stride_crossing_levels_match_coordinate_walk():
+    for shape in [(2, 4), (8,), (1, 4), (4, 1), (2, 2, 2), (3, 2, 5)]:
         topo = Topology.from_spec(
             MachineSpec(shape=shape, level_names=tuple("l%d" % i
                                                        for i in range(len(shape)))))
         n = topo.nprocs
-        mat = lca_level_matrix(shape)
         src, dst = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+        got = topo.crossing_levels(src.reshape(-1), dst.reshape(-1))
         cs, cd = topo.coords(src.reshape(-1)), topo.coords(dst.reshape(-1))
         diff = cs != cd
         expect = np.where(diff.any(axis=-1), np.argmax(diff, axis=-1),
-                          len(shape)).reshape(n, n)
-        np.testing.assert_array_equal(mat, expect)
+                          len(shape))
+        np.testing.assert_array_equal(got, expect)
 
 
 def test_bucket_times_matches_per_phase_pricing():
