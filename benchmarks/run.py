@@ -62,12 +62,59 @@ PERF_JSON = "BENCH_perf.json"
 def machine_info() -> dict:
     import os
 
-    return {
+    info = {
         "platform": platform.platform(),
         "python": platform.python_version(),
         "processor": platform.processor(),
         "cpu_count": os.cpu_count(),
     }
+    try:
+        import jax
+
+        info["jax"] = {
+            "version": jax.__version__,
+            "backend": jax.default_backend(),
+            "devices": [str(d) for d in jax.devices()],
+        }
+    except Exception as e:  # noqa: BLE001 - record why jax is absent
+        info["jax"] = {"unavailable": str(e)}
+    return info
+
+
+def _trajectory(sections: dict) -> dict:
+    """The headline number(s) of each executed section — the compact
+    cross-PR comparison block at the top of ``BENCH_perf.json`` (diff
+    this against the previous PR's instead of spelunking the full
+    per-section results)."""
+    headline: dict = {}
+    for key, entry in sections.items():
+        if "skipped" in entry:
+            continue
+        res = entry.get("result")
+        row: dict = {"elapsed_s": round(entry.get("elapsed_s", 0.0), 3)}
+        if key == "sim_eval" and isinstance(res, dict):
+            eng = res.get("engine_bench") or {}
+            jb = res.get("jax_bench") or {}
+            jp = res.get("jax_parity") or {}
+            par = res.get("engine_parity") or {}
+            row.update({
+                "batched_vs_event_speedup": eng.get("speedup"),
+                "jax_vs_numpy_speedup": jb.get("speedup"),
+                "jax_parity_max_rel": jp.get("max_rel_diff"),
+                "engine_parity_max_abs_s": par.get("max_abs_diff_s"),
+                "mean_rank_agreement": res.get("mean_rank_agreement"),
+            })
+        elif key == "mapping_eval" and isinstance(res, dict):
+            row["speedup"] = res.get("speedup")
+        elif key == "mapper_tuning" and isinstance(res, dict):
+            row["all_oracles_rediscovered"] = res.get(
+                "all_oracles_rediscovered")
+        elif key == "microbench" and isinstance(res, list):
+            row["us_per_call"] = {
+                r["name"]: round(r["us_per_call"], 1) for r in res
+            }
+        headline[key] = {k: v for k, v in row.items() if v is not None}
+    return headline
 
 
 def write_perf_trajectory(sections: dict, path: str = PERF_JSON,
@@ -75,6 +122,7 @@ def write_perf_trajectory(sections: dict, path: str = PERF_JSON,
     """Aggregate executed sections into the per-PR perf trajectory file."""
     payload = {
         "machine": machine_info(),
+        "trajectory": _trajectory(sections),
         "sections": sections,
     }
     Path(path).write_text(json.dumps(payload, indent=2, default=str) + "\n")

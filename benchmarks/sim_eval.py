@@ -1,6 +1,6 @@
 """Simulator evaluation: time-domain tuning, engine parity, and scale.
 
-Four lanes, all recorded in ``BENCH_sim.json`` (the CI artifact next to
+Six lanes, all recorded in ``BENCH_sim.json`` (the CI artifact next to
 ``BENCH_mapping.json`` and ``BENCH_tuning.json``):
 
 **Tuning oracle sweep** — for every registry application the mapper
@@ -28,6 +28,20 @@ priced by the batched engine in one grouped ``candidates x phases x
 ports`` pass vs the event engine replaying each candidate. The measured
 speedup must stay above the committed ``SPEEDUP_FLOOR`` (the CI
 perf-regression lane re-checks the recorded value).
+
+**JAX parity** — the device-compiled engine
+(``repro.sim.jax_backend``, ``engine="batched-jax"``) must agree with
+the NumPy engine to ``JAX_PARITY_RTOL`` (1e-6) relative on the paper
+cluster, for all nine apps, every tuner variant, against NumPy pricing
+with symmetry folding + incremental re-pricing both ON and OFF.
+
+**JAX speedup** — the 4096-proc beam-pricing sweep: each feasible app's
+most balanced grid, 8 seeded uniform-random-permutation placements (the
+arbitrary-placement search workload, where the NumPy engine's fold and
+incremental shortcuts structurally cannot fire), NumPy vs JAX, warm
+caches/compiles, best of ``JAX_SWEEP_REPS``. The aggregate speedup must
+stay above the committed ``JAX_SPEEDUP_FLOOR`` (2x; measured ~4x on
+CPU jit).
 
 **Scale** — ``time_tuned_app`` must complete the full nine-app registry
 at ``--scale-procs`` (default 1024) processors inside ``SCALE_BUDGET_S``.
@@ -65,7 +79,7 @@ import numpy as np
 from repro import apps
 from repro.search.space import build_program
 from repro.search.tuner import tune_app
-from repro.sim.batch import FOLD_STATS, fold_stats_reset, price_stacks
+from repro.sim.batch import fold_stats, price_stacks
 from repro.sim.cost import time_search_space, time_tuned_app
 
 CHIPS = 64
@@ -75,6 +89,13 @@ ENGINE_ATOL = 1e-9       # acceptance: batched-vs-event per-step agreement
 SPEEDUP_FLOOR = 10.0     # acceptance: batched >= 10x event on the sweep
 SCALE_PROCS = 1024
 SCALE_BUDGET_S = 60.0    # acceptance: full registry time-tuning at scale
+
+# JAX backend lanes (repro.sim.jax_backend)
+JAX_PARITY_RTOL = 1e-6   # acceptance: jax-vs-numpy relative agreement
+JAX_SPEEDUP_FLOOR = 2.0  # acceptance: jax >= 2x numpy on the 4096 sweep
+JAX_SWEEP_PROCS = 4096   # beam-pricing sweep scale (arbitrary placements)
+JAX_SWEEP_CANDS = 8      # seeded random permutations per app
+JAX_SWEEP_REPS = 3       # timed repetitions (best-of; warm runs excluded)
 
 # --scale lane (the 100k-proc suite)
 FOLD_PARITY_PROCS = 4096      # folded == dense bit-equality probe scale
@@ -231,6 +252,133 @@ def engine_bench(report=print, chips: int = CHIPS) -> dict:
     }
 
 
+# ---------------------------------------------------------- jax backend
+def jax_parity(report=print) -> dict:
+    """The JAX engine vs the NumPy reference, registry-wide: every app,
+    every (grid, options) point, default placement + every bijective
+    tuner variant, against NumPy pricing with folding/incremental both
+    ON and OFF. Relative agreement must stay within ``JAX_PARITY_RTOL``
+    (the jax engine runs float64 — observed agreement is ~1e-15)."""
+    from repro.sim import jax_backend
+
+    if not jax_backend.have_jax():
+        report("jax parity: jax unavailable (FAIL)")
+        return {"available": False, "ok": False}
+    worst = 0.0
+    n_checked = 0
+    for app in apps.iter_apps():
+        for mb, me, grid, stack in _candidate_sets(app, None):
+            jeng = jax_backend.to_jax(mb.beam_pricer(grid))
+            t_jax = jeng.step_times(stack)
+            eng = mb.beam_pricer(grid)
+            for fold in (True, False):
+                ref = eng.step_times(stack, fold=fold, incremental=fold)
+                rel = np.abs(t_jax - ref) / np.maximum(np.abs(ref), 1e-300)
+                worst = max(worst, float(rel.max()))
+            n_checked += len(stack)
+    ok = worst <= JAX_PARITY_RTOL
+    report(f"jax parity (paper cluster): {n_checked} placements x "
+           f"fold on/off, max rel |jax - numpy| = {worst:.3e} "
+           f"({'OK' if ok else 'FAIL'} @ {JAX_PARITY_RTOL:g})")
+    return {"available": True, "placements": n_checked,
+            "max_rel_diff": worst, "rtol": JAX_PARITY_RTOL, "ok": ok}
+
+
+def _balanced_grid(model_factory, app, procs: int):
+    """The most balanced feasible grid of ``app`` at ``procs`` (minimal
+    aspect ratio; the shape a tuner shortlists), or None."""
+    best = None
+    for grid in app.search_space.grids(procs):
+        try:
+            model_factory._validate(grid)
+        except ValueError:
+            continue
+        key = (max(grid) / min(grid), grid)
+        if best is None or key < best[0]:
+            best = (key, grid)
+    return None if best is None else best[1]
+
+
+def jax_bench(report=print, procs: int = JAX_SWEEP_PROCS,
+              n_cands: int = JAX_SWEEP_CANDS,
+              reps: int = JAX_SWEEP_REPS) -> dict:
+    """The committed beam-pricing sweep: each feasible registry app's
+    most balanced grid at ``procs`` procs, priced for ``n_cands`` seeded
+    *arbitrary* placements (uniform random permutations — the search
+    workload an ASI-style proposer/evaluator loop generates, where the
+    NumPy engine's symmetry folding and incremental re-pricing cannot
+    fire), NumPy engine vs the compiled JAX engine, best of ``reps``
+    after a warm run (schedule caches and jit compiles excluded from
+    both sides). The aggregate speedup must stay above
+    ``JAX_SPEEDUP_FLOOR``."""
+    from repro.sim import jax_backend
+
+    if not jax_backend.have_jax():
+        report("jax bench: jax unavailable (FAIL)")
+        return {"available": False, "ok": False}
+    rng = np.random.default_rng(0)
+    work = []
+    for app in apps.iter_apps():
+        if app.search_space is None or app.collective is None:
+            continue
+        if not app.search_space.grids(procs):
+            report(f"jax bench: {app.name} infeasible at {procs}; skipped")
+            continue
+        sp = time_search_space(app)
+        opts = dict(next(iter(app.search_space.option_combos())))
+        model = sp.cost_model(procs, opts)
+        grid = _balanced_grid(model, app, procs)
+        if grid is None:
+            report(f"jax bench: {app.name} has no simulable grid; skipped")
+            continue
+        stack = np.stack([rng.permutation(procs) for _ in range(n_cands)])
+        work.append((app.name, grid, model.batch(grid),
+                     jax_backend.to_jax(model.batch(grid)), stack))
+
+    def time_best(fn):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    rows, worst = [], 0.0
+    tot_np = tot_jax = 0.0
+    for name, grid, eng, jeng, stack in work:
+        ref = eng.step_times(stack)          # warm: schedule + fold probe
+        got = jeng.step_times(stack)         # warm: export + jit compile
+        rel = np.abs(got - ref) / np.maximum(np.abs(ref), 1e-300)
+        worst = max(worst, float(rel.max()))
+        t_np = time_best(lambda: eng.step_times(stack))
+        t_jax = time_best(lambda: jeng.step_times(stack))
+        tot_np += t_np
+        tot_jax += t_jax
+        rows.append({"app": name, "grid": list(grid),
+                     "numpy_s": t_np, "jax_s": t_jax,
+                     "speedup": t_np / t_jax if t_jax > 0 else float("inf"),
+                     "max_rel_diff": float(rel.max())})
+    speedup = tot_np / tot_jax if tot_jax > 0 else float("inf")
+    ok = (speedup >= JAX_SPEEDUP_FLOOR and worst <= JAX_PARITY_RTOL
+          and bool(rows))
+    report(f"\njax beam-pricing sweep ({procs} procs, {n_cands} arbitrary "
+           f"placements/app, best of {reps}):")
+    report(f"{'app':10s} {'grid':>14s} {'numpy_ms':>9s} {'jax_ms':>8s} "
+           f"{'speedup':>8s}")
+    for r in rows:
+        gs = "x".join(str(g) for g in r["grid"])
+        report(f"{r['app']:10s} {gs:>14s} {r['numpy_s'] * 1e3:9.1f} "
+               f"{r['jax_s'] * 1e3:8.1f} {r['speedup']:7.2f}x")
+    report(f"aggregate: numpy {tot_np * 1e3:.1f}ms  jax {tot_jax * 1e3:.1f}ms "
+           f" speedup {speedup:.2f}x (floor {JAX_SPEEDUP_FLOOR:.0f}x)  "
+           f"max rel diff {worst:.2e} ({'OK' if ok else 'FAIL'})")
+    return {"available": True, "procs": procs, "cands_per_app": n_cands,
+            "reps": reps, "apps": rows,
+            "numpy_s": tot_np, "jax_s": tot_jax, "speedup": speedup,
+            "speedup_floor": JAX_SPEEDUP_FLOOR, "max_rel_diff": worst,
+            "rtol": JAX_PARITY_RTOL, "ok": ok}
+
+
 def scale_bench(report=print, procs: int = SCALE_PROCS) -> dict:
     """time_tuned_app over the full registry at scale, against the
     CI-enforced wall-clock budget."""
@@ -279,7 +427,20 @@ def fold_parity(report=print, procs: int = FOLD_PARITY_PROCS) -> dict:
     """Symmetry-folded + incremental pricing vs dense pricing, bit-equal,
     for every candidate placement of the probe apps at ``procs`` — and
     the fold must actually fire (otherwise this lane proves nothing)."""
-    fold_stats_reset()
+    with fold_stats() as stats:
+        worst_exact, n_checked = _fold_parity_sweep(procs)
+    ok = worst_exact and stats["pairs_folded"] > 0
+    report(f"fold parity ({procs} procs): {n_checked} placements, "
+           f"folded == dense bit-equal: {worst_exact}, "
+           f"pairs folded {stats['pairs_folded']} / "
+           f"priced {stats['pairs_priced']} "
+           f"({'OK' if ok else 'FAIL'})")
+    return {"procs": procs, "apps": list(FOLD_PARITY_APPS),
+            "placements": n_checked, "bit_equal": worst_exact,
+            "fold_stats": dict(stats), "ok": ok}
+
+
+def _fold_parity_sweep(procs: int) -> tuple[bool, int]:
     worst_exact = True
     n_checked = 0
     for name in FOLD_PARITY_APPS:
@@ -307,16 +468,7 @@ def fold_parity(report=print, procs: int = FOLD_PARITY_PROCS) -> dict:
                 worst_exact = worst_exact and bool(
                     np.array_equal(t_fold, t_dense))
                 n_checked += len(stack)
-    stats = dict(FOLD_STATS)
-    ok = worst_exact and stats["pairs_folded"] > 0
-    report(f"fold parity ({procs} procs): {n_checked} placements, "
-           f"folded == dense bit-equal: {worst_exact}, "
-           f"pairs folded {stats['pairs_folded']} / "
-           f"priced {stats['pairs_priced']} "
-           f"({'OK' if ok else 'FAIL'})")
-    return {"procs": procs, "apps": list(FOLD_PARITY_APPS),
-            "placements": n_checked, "bit_equal": worst_exact,
-            "fold_stats": stats, "ok": ok}
+    return worst_exact, n_checked
 
 
 def xl_bench(report=print, procs: int = SCALE_XL_PROCS,
@@ -385,7 +537,9 @@ def run(report=print, chips: int = CHIPS, quick: bool = False,
     report(f"\ntuning sweep: {elapsed:.2f}s (budget {TIME_BUDGET_S:.0f}s)")
 
     parity = engine_parity(report)
+    j_parity = jax_parity(report)
     engines = None if quick else engine_bench(report, chips)
+    j_bench = None if quick else jax_bench(report)
     scale = None if quick else scale_bench(report, scale_procs)
 
     agreements = [
@@ -413,7 +567,9 @@ def run(report=print, chips: int = CHIPS, quick: bool = False,
             sum(agreements) / len(agreements) if agreements else None
         ),
         "engine_parity": parity,
+        "jax_parity": j_parity,
         "engine_bench": engines,
+        "jax_bench": j_bench,
         "scale_bench": scale,
     }
     if json_path:
@@ -446,6 +602,29 @@ def check(result: dict) -> list[str]:
         errors.append(f"batched engine diverged from the event engine by "
                       f"{parity['max_abs_diff_s']:.3e}s "
                       f"(> {ENGINE_ATOL:g})")
+    jp = result.get("jax_parity")
+    if jp is not None:
+        if not jp.get("available", False):
+            errors.append("the jax backend is unavailable (the parity lane "
+                          "requires jax)")
+        elif not jp["ok"]:
+            errors.append(f"jax engine diverged from the numpy engine by "
+                          f"{jp['max_rel_diff']:.3e} relative "
+                          f"(> {JAX_PARITY_RTOL:g})")
+    jb = result.get("jax_bench")
+    if jb is not None:
+        if not jb.get("available", False):
+            errors.append("the jax backend is unavailable (the speedup lane "
+                          "requires jax)")
+        else:
+            if jb["speedup"] < jb["speedup_floor"]:
+                errors.append(
+                    f"jax beam-pricing speedup {jb['speedup']:.2f}x fell "
+                    f"below the committed {jb['speedup_floor']:.0f}x floor")
+            if jb["max_rel_diff"] > jb["rtol"]:
+                errors.append(f"jax sweep diverged by "
+                              f"{jb['max_rel_diff']:.3e} relative "
+                              f"(> {jb['rtol']:g})")
     eng = result.get("engine_bench")
     if eng is not None and eng["speedup"] < eng["speedup_floor"]:
         errors.append(f"batched-engine speedup {eng['speedup']:.1f}x fell "

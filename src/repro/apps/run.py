@@ -23,9 +23,12 @@ winning Mapple program + candidate leaderboard are printed. The legacy
 hand-tuned volume pair is checked as a regression oracle. ``--tune
 --time`` swaps the objective for the batched discrete-event simulator
 (predicted seconds per step, every beam placement batch-priced) — fast
-enough to search the registry at 1024+ processors:
+enough to search the registry at 1024+ processors; ``--backend jax``
+prices the beams through the device-compiled JAX engine instead of the
+NumPy reference (same winners, <=1e-6-relative identical seconds):
 
     PYTHONPATH=src python -m repro.apps.run --all --tune --time --procs 1024
+    PYTHONPATH=src python -m repro.apps.run --all --tune --time --backend jax
 
 ``--simulate`` runs each selected app's mapped step through the
 discrete-event simulator (``repro.sim``): the plan's device permutation
@@ -100,13 +103,18 @@ def _finish(procs: int | None, json_rows: list, failures: list[str],
 
 
 def tune(selection, procs: int | None, report=print,
-         json_path: str | None = None, time_domain: bool = False) -> int:
+         json_path: str | None = None, time_domain: bool = False,
+         backend: str = "numpy") -> int:
     """Run the autotuner over the selected apps; nonzero on any failure.
 
     ``time_domain`` swaps each app's volume objective for the batched
     simulator (``repro.sim.cost.time_tuned_app``): candidates are scored
     in predicted seconds and every surviving beam variant's actual
     placement is batch-priced (the ``placed_s`` leaderboard column).
+    ``backend`` picks the pricing engine for the time objective —
+    ``"numpy"`` (the bit-exact reference) or ``"jax"`` (the
+    device-compiled twin, <=1e-6-relative identical; see
+    docs/simulator.md "Backends").
     """
     import time
 
@@ -149,7 +157,8 @@ def tune(selection, procs: int | None, report=print,
                 continue
             from repro.sim.cost import time_tuned_app
 
-            app = time_tuned_app(app)
+            engine = "batched-jax" if backend == "jax" else "batched"
+            app = time_tuned_app(app, engine=engine)
         rep = tune_app(app, procs)
         tuned += 1
         for line in report_lines(rep):
@@ -276,6 +285,11 @@ def main(argv=None) -> int:
                     help="with --tune: search on batched-simulator seconds "
                          "instead of communication volume (placements are "
                          "batch-priced; works at 1024+ procs)")
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="with --tune --time: pricing engine — 'numpy' "
+                         "(bit-exact reference) or 'jax' (device-compiled, "
+                         "<=1e-6-relative identical, fastest on arbitrary "
+                         "placements; see docs/simulator.md)")
     ap.add_argument("--simulate", action="store_true",
                     help="run each app's mapped step through the "
                          "discrete-event simulator and print the timeline")
@@ -293,6 +307,14 @@ def main(argv=None) -> int:
                  "--execute/--show-ir/--simulate")
     if args.time and not args.tune:
         ap.error("--time requires --tune")
+    if args.backend != "numpy" and not args.time:
+        ap.error("--backend requires --tune --time")
+    if args.backend == "jax":
+        from repro.sim.jax_backend import have_jax
+
+        if not have_jax():
+            ap.error("--backend jax needs jax installed in this "
+                     "environment; use --backend numpy")
     if args.simulate and (args.execute or args.show_ir):
         ap.error("--simulate is a separate mode; run it without "
                  "--execute/--show-ir")
@@ -331,7 +353,7 @@ def main(argv=None) -> int:
 
     if args.tune:
         return tune(selection, args.procs, json_path=args.json,
-                    time_domain=args.time)
+                    time_domain=args.time, backend=args.backend)
     if args.simulate:
         return simulate(selection, args.procs, json_path=args.json)
 

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as fa_mod
 from repro.kernels import mamba_scan as ms_mod
 from repro.kernels import matmul as mm_mod
+from repro.kernels import segment_reduce as sr_mod
 from repro.kernels import stencil as st_mod
 from repro.kernels import wkv6 as wkv_mod
 
@@ -51,6 +52,14 @@ def flash_attention(q, k, v, *, window: int = 0, scale=None,
 @functools.partial(jax.jit, static_argnames=("bm",))
 def stencil_step(field, bm: int = st_mod.DEFAULT_BM):
     return st_mod.stencil_pallas(field, bm=bm, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("seg", "br", "bc"))
+def segment_rowmax(vals, seg: int = 1, br: int = sr_mod.DEFAULT_BR,
+                   bc: int = sr_mod.DEFAULT_BC):
+    """Per-row max of length-``seg`` segment sums (congestion reduce)."""
+    return sr_mod.segment_rowmax_pallas(vals, seg, br=br, bc=bc,
+                                        interpret=_interpret())
 
 
 @jax.jit

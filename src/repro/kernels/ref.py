@@ -57,6 +57,12 @@ def wkv6(r, k, v, w, u):
     return y.astype(r.dtype), s
 
 
+def segment_rowmax(vals: jax.Array, seg: int = 1) -> jax.Array:
+    """Per-row max of contiguous length-``seg`` segment sums (vals >= 0)."""
+    rows, cols = vals.shape
+    return vals.reshape(rows, cols // seg, seg).sum(axis=2).max(axis=1)
+
+
 def mamba_scan(xs, dt, Bs, Cs, A):
     """Sequential selective scan. xs/dt: (B,T,di); Bs/Cs: (B,T,n); A: (di,n)."""
     B, T, di = xs.shape

@@ -1,0 +1,84 @@
+"""Blocked segment-reduce kernel for congestion tables.
+
+The simulator's JAX pricing backend (``repro.sim.jax_backend``) reduces
+dense per-candidate congestion tables ``vals[row, col]`` — one row per
+(candidate, slab) pair, one column per processor — in two shapes:
+
+  * ``seg == 1``: per-row **max** (the stride-1 level, where every port
+    carries at most one message per slab and direction);
+  * ``seg == level stride``: per-row max of contiguous **segment sums**
+    (the outer levels, where the ``seg`` processors of one subtree share
+    the subtree's port and their byte loads add before the max).
+
+Both are one kernel: ``out[r] = max_j sum_{i<seg} vals[r, j*seg + i]``.
+
+Tiling: grid (rows/br, cols/bc) with the column axis fastest; each block
+reduces its (br, bc) tile to per-row partial maxima accumulated in VMEM
+across the column sweep (``bc`` is always a multiple of ``seg``, so no
+segment straddles a block boundary). Values are assumed non-negative
+(they are message counts and byte loads): the wrapper zero-pads ragged
+shapes, and a zero pad segment is exactly an idle port.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BR = 8
+DEFAULT_BC = 512
+
+
+def _segment_rowmax_kernel(v_ref, o_ref, acc_ref, *, seg: int, n_c: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    blk = v_ref[...]
+    br, bc = blk.shape
+    part = blk.reshape(br, bc // seg, seg).sum(axis=2).max(axis=1)
+    acc_ref[...] = jnp.maximum(acc_ref[...], part)
+
+    @pl.when(j == n_c - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def segment_rowmax_pallas(
+    vals: jax.Array,
+    seg: int = 1,
+    *,
+    br: int = DEFAULT_BR,
+    bc: int = DEFAULT_BC,
+    interpret: bool = False,
+) -> jax.Array:
+    """``max_j sum_{i<seg} vals[r, j*seg + i]`` per row, for ``vals >= 0``.
+
+    Ragged shapes are zero-padded up to the block tiling (a zero pad
+    segment behaves as an idle port under the non-negative contract).
+    """
+    rows, cols = vals.shape
+    seg = int(seg)
+    assert seg >= 1 and cols % seg == 0, (vals.shape, seg)
+    bc = seg * max(1, min(bc, cols) // seg)
+    br = min(br, rows)
+    pad_r = -rows % br
+    pad_c = -cols % bc
+    if pad_r or pad_c:
+        vals = jnp.pad(vals, ((0, pad_r), (0, pad_c)))
+    grid = (vals.shape[0] // br, vals.shape[1] // bc)
+    out = pl.pallas_call(
+        functools.partial(_segment_rowmax_kernel, seg=seg, n_c=grid[1]),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((vals.shape[0],), vals.dtype),
+        scratch_shapes=[pltpu.VMEM((br,), vals.dtype)],
+        interpret=interpret,
+    )(vals)
+    return out[:rows]

@@ -47,8 +47,10 @@ them, copying the rest from the stack's base candidate
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Sequence
+import threading
+from typing import Iterator, Sequence
 
 import numpy as np
 
@@ -64,19 +66,69 @@ from repro.sim.topology import Topology
 #: pass, bounding peak memory of the (chunk, T) endpoint arrays.
 _MAX_GATHER_ELEMS = 1 << 24
 
-#: Instrumentation counters for the scaled pricing paths (reset with
-#: :func:`fold_stats_reset`; asserted by the symmetry property tests).
-#: A "pair" is one (candidate, unique-slab) congestion price.
-FOLD_STATS = {
-    "pairs_priced": 0,     # priced directly via Topology.bucket_times
-    "pairs_folded": 0,     # copied from a translation representative
-    "pairs_reused": 0,     # copied from the stack's base candidate
-    "fold_fallbacks": 0,   # candidates whose assignment broke a fold
-}
+#: Counter keys for the scaled pricing paths. A "pair" is one
+#: (candidate, unique-slab) congestion price.
+FOLD_STAT_KEYS = (
+    "pairs_priced",     # priced directly via Topology.bucket_times
+    "pairs_folded",     # copied from a translation representative
+    "pairs_reused",     # copied from the stack's base candidate
+    "fold_fallbacks",   # candidates whose assignment broke a fold
+)
+
+#: Process-lifetime instrumentation totals. Kept as a module global for
+#: backward compatibility (reset with :func:`fold_stats_reset`), but
+#: concurrent or nested runs should scope their counts with the
+#: :func:`fold_stats` context manager instead of resetting this dict —
+#: a reset in one run silently corrupts another run's readings.
+FOLD_STATS = {key: 0 for key in FOLD_STAT_KEYS}
+
+_FOLD_SCOPES = threading.local()
+
+
+def _fold_scopes() -> list[dict]:
+    scopes = getattr(_FOLD_SCOPES, "stack", None)
+    if scopes is None:
+        scopes = _FOLD_SCOPES.stack = []
+    return scopes
+
+
+def _count(key: str, n: int) -> None:
+    """Bump one fold counter: the global totals plus every counter opened
+    by this thread's active :func:`fold_stats` scopes (so nested scopes
+    each see the events of the work they wrap)."""
+    FOLD_STATS[key] += n
+    for counter in _fold_scopes():
+        counter[key] += n
+
+
+@contextlib.contextmanager
+def fold_stats() -> Iterator[dict]:
+    """Scope a pricing run's fold instrumentation.
+
+    Yields a fresh per-run counter dict (the :data:`FOLD_STAT_KEYS`)
+    that accumulates only the events of pricing performed inside the
+    ``with`` block on the current thread. Unlike resetting the module
+    global, scopes are safe to nest and cannot corrupt a concurrent
+    run's counts; the global :data:`FOLD_STATS` totals keep
+    accumulating regardless.
+    """
+    counter = {key: 0 for key in FOLD_STAT_KEYS}
+    scopes = _fold_scopes()
+    scopes.append(counter)
+    try:
+        yield counter
+    finally:
+        scopes.remove(counter)
+
+
+def fold_stats_snapshot() -> dict:
+    """A point-in-time copy of the global fold counters."""
+    return dict(FOLD_STATS)
 
 
 def fold_stats_reset() -> None:
-    """Zero the :data:`FOLD_STATS` instrumentation counters."""
+    """Zero the global :data:`FOLD_STATS` totals (legacy API; prefer the
+    :func:`fold_stats` scope, which needs no reset)."""
     for key in FOLD_STATS:
         FOLD_STATS[key] = 0
 
@@ -211,7 +263,7 @@ class BatchSimulator:
             axes = np.flatnonzero((fshift != 0).any(axis=0))
             for c in range(n):
                 if not _is_permutation(a[c], nprocs):
-                    FOLD_STATS["fold_fallbacks"] += 1
+                    _count("fold_fallbacks", 1)
                     continue
                 agrid = a[c].reshape(sched.grid)
                 periods = {ax: self._axis_period(agrid, ax) for ax in axes}
@@ -225,7 +277,7 @@ class BatchSimulator:
                 np.minimum.at(first, inverse, slab_ids)
                 rep[c] = first[inverse]
                 if (rep[c] != frep).any():
-                    FOLD_STATS["fold_fallbacks"] += 1
+                    _count("fold_fallbacks", 1)
         if incremental and n > 1:
             changed = a[1:] != a[:1]
             for c in range(1, n):
@@ -240,10 +292,10 @@ class BatchSimulator:
                                       minlength=u) == 0
         sizes = np.diff(sched.starts)
         need = (rep == slab_ids[None, :]) & ~unch & (sizes > 0)[None, :]
-        FOLD_STATS["pairs_priced"] += int(need.sum())
-        FOLD_STATS["pairs_folded"] += int((rep != slab_ids[None, :]).sum())
-        FOLD_STATS["pairs_reused"] += int(
-            (unch & (rep == slab_ids[None, :])).sum())
+        _count("pairs_priced", int(need.sum()))
+        _count("pairs_folded", int((rep != slab_ids[None, :]).sum()))
+        _count("pairs_reused",
+               int((unch & (rep == slab_ids[None, :])).sum()))
         return rep, unch, need
 
     def _gather_pairs(self, a: np.ndarray, cc: np.ndarray, ss: np.ndarray
@@ -354,6 +406,14 @@ def price_stacks(stacks: Sequence[tuple["BatchSimulator", np.ndarray]],
     out: list[np.ndarray | None] = [None] * len(stacks)
     prepared: list[tuple] = []
     for i, (engine, assigns) in enumerate(stacks):
+        if getattr(engine, "prices_independently", False):
+            # Accelerator-resident engines (repro.sim.jax_backend) price
+            # each stack as one compiled program; concatenating their
+            # transfers into the shared NumPy congestion pass would force
+            # the data back to the host.
+            out[i] = engine.step_times(assigns, fold=fold,
+                                       incremental=incremental)
+            continue
         a = engine._flat_assignments(assigns)
         sched = engine.schedule
         if (a.shape[0] == 0 or sched.n_phases == 0
@@ -474,8 +534,11 @@ def _appearance_rank(values: np.ndarray) -> np.ndarray:
 __all__ = [
     "BatchSimulator",
     "FOLD_STATS",
+    "FOLD_STAT_KEYS",
     "batch_simulator",
     "canonical_assignment",
+    "fold_stats",
     "fold_stats_reset",
+    "fold_stats_snapshot",
     "price_stacks",
 ]

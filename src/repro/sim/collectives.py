@@ -60,6 +60,14 @@ _PHASES_CACHE_MAX = 256
 _PACKED_CACHE: dict = {}
 _PHASES_CACHE: dict = {}
 
+#: Hit/miss/eviction counters for the two schedule memos, read through
+#: ``cache_stats()`` and zeroed by ``clear_caches()``. Diagnostics only
+#: — correctness never depends on a hit.
+_CACHE_STATS = {
+    "packed_hits": 0, "packed_misses": 0, "packed_evictions": 0,
+    "phases_hits": 0, "phases_misses": 0, "phases_evictions": 0,
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class Phase:
@@ -561,10 +569,11 @@ def _pattern_key(pattern: CollectivePattern) -> tuple:
             tuple(sorted((k, _hashable(v)) for k, v in pattern.params.items())))
 
 
-def _memo_put(cache: dict, key, value, maxsize: int):
+def _memo_put(cache: dict, key, value, maxsize: int, stat: str):
     cache[key] = value
     while len(cache) > maxsize:
         cache.pop(next(iter(cache)))
+        _CACHE_STATS[stat + "_evictions"] += 1
     return value
 
 
@@ -583,7 +592,9 @@ def packed_schedule(pattern: CollectivePattern, grid: Sequence[int], *,
     key = (_pattern_key(pattern), grid, int(elem_bytes))
     hit = _PACKED_CACHE.get(key)
     if hit is not None:
+        _CACHE_STATS["packed_hits"] += 1
         return hit
+    _CACHE_STATS["packed_misses"] += 1
     try:
         builder = _BUILDERS[pattern.kind]
     except KeyError:
@@ -638,7 +649,7 @@ def packed_schedule(pattern: CollectivePattern, grid: Sequence[int], *,
         starts=starts, phase_id=phase_id, src=src, dst=dst, nbytes=nbytes,
         fold_rep=fold_rep, fold_shift=fold_shift,
     )
-    return _memo_put(_PACKED_CACHE, key, packed, _PACKED_CACHE_MAX)
+    return _memo_put(_PACKED_CACHE, key, packed, _PACKED_CACHE_MAX, "packed")
 
 
 def _fold_metadata(grid: tuple[int, ...], starts: np.ndarray,
@@ -719,20 +730,52 @@ def build_phases(pattern: CollectivePattern, grid: Sequence[int],
     key = (_pattern_key(pattern), grid, int(elem_bytes), flat.tobytes())
     hit = _PHASES_CACHE.get(key)
     if hit is not None:
+        _CACHE_STATS["phases_hits"] += 1
         return list(hit)
+    _CACHE_STATS["phases_misses"] += 1
     packed = packed_schedule(pattern, grid, elem_bytes=elem_bytes)
     phases = expand_packed(packed, flat.reshape(grid))
-    _memo_put(_PHASES_CACHE, key, tuple(phases), _PHASES_CACHE_MAX)
+    _memo_put(_PHASES_CACHE, key, tuple(phases), _PHASES_CACHE_MAX, "phases")
     return phases
 
 
-def schedule_cache_clear() -> None:
-    """Drop all memoized schedules (tests / benchmarks isolating timings)."""
+def clear_caches() -> None:
+    """Drop every memoized schedule — the two FIFO memos and the three
+    phase-shape ``lru_cache``s — and zero ``cache_stats()`` counters.
+
+    Rebuilds after a clear are bit-identical (the builders are pure
+    functions of their keys); test fixtures and benchmarks call this to
+    isolate timings and exercise cold paths.
+    """
     _PACKED_CACHE.clear()
     _PHASES_CACHE.clear()
     _ring_phases.cache_clear()
     _tree_bcast_phases.cache_clear()
     _tree_rounds.cache_clear()
+    for k in _CACHE_STATS:
+        _CACHE_STATS[k] = 0
+
+
+def schedule_cache_clear() -> None:
+    """Back-compat alias of :func:`clear_caches`."""
+    clear_caches()
+
+
+def cache_stats() -> dict:
+    """Sizes, bounds, and hit/miss/eviction counters of every schedule
+    cache (a snapshot; mutating the returned dict changes nothing)."""
+    stats = dict(_CACHE_STATS)
+    stats["packed_size"] = len(_PACKED_CACHE)
+    stats["packed_max"] = _PACKED_CACHE_MAX
+    stats["phases_size"] = len(_PHASES_CACHE)
+    stats["phases_max"] = _PHASES_CACHE_MAX
+    for name, fn in (("ring_phases", _ring_phases),
+                     ("tree_bcast_phases", _tree_bcast_phases),
+                     ("tree_rounds", _tree_rounds)):
+        info = fn.cache_info()
+        stats[name] = {"hits": info.hits, "misses": info.misses,
+                       "size": info.currsize, "max": info.maxsize}
+    return stats
 
 
 __all__ = [
@@ -742,6 +785,8 @@ __all__ = [
     "allreduce",
     "alltoall",
     "build_phases",
+    "cache_stats",
+    "clear_caches",
     "expand_packed",
     "packed_schedule",
     "ring_allgather",

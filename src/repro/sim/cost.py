@@ -170,13 +170,17 @@ class SimulatedTimeCostModel(CostModel):
     elem_bytes: int = DEFAULT_ELEM_BYTES
     steps: int = DEFAULT_STEPS
     backpressure: int = 2
-    engine: str = "batched"     # "batched" envelope | "event" exact queue
+    #: "batched" NumPy envelope | "batched-jax" device-compiled envelope
+    #: (same numbers to <=1e-6 relative; see docs/simulator.md) | "event"
+    #: exact queue.
+    engine: str = "batched"
     name = "simulated_time"
 
     def __post_init__(self) -> None:
-        if self.engine not in ("batched", "event"):
+        if self.engine not in ("batched", "batched-jax", "event"):
             raise ValueError(
-                f"engine must be 'batched' or 'event', got {self.engine!r}"
+                f"engine must be 'batched', 'batched-jax' or 'event', "
+                f"got {self.engine!r}"
             )
 
     def _validate(self, factors: Sequence[int]) -> tuple[int, ...]:
@@ -214,19 +218,27 @@ class SimulatedTimeCostModel(CostModel):
 
     def batch(self, grid: tuple[int, ...]) -> BatchSimulator:
         """The analytic-envelope engine for one candidate grid (memoized
-        packed schedule; prices whole assignment stacks in one call)."""
-        return batch_simulator(
+        packed schedule; prices whole assignment stacks in one call).
+        Under ``engine="batched-jax"`` this is the device-compiled
+        :class:`~repro.sim.jax_backend.JaxBatchSimulator` twin."""
+        eng = batch_simulator(
             self.pattern, self.spec, grid,
             step_flops=self.step_flops, elem_bytes=self.elem_bytes,
             backpressure=self.backpressure, steps=self.steps,
         )
+        if self.engine == "batched-jax":
+            from repro.sim.jax_backend import to_jax
+
+            return to_jax(eng)
+        return eng
 
     def beam_pricer(self, factors: Sequence[int]) -> BatchSimulator | None:
         """The batch engine for pricing a beam of placements of one grid
         (the tuner groups these into one registry-wide pass via
-        ``sim.batch.price_stacks``); ``None`` when this model is pinned
-        to the exact event engine."""
-        if self.engine != "batched":
+        ``sim.batch.price_stacks``, which lets ``batched-jax`` engines
+        price their stacks as standalone compiled programs); ``None``
+        when this model is pinned to the exact event engine."""
+        if self.engine == "event":
             return None
         return self.batch(self._validate(factors))
 
@@ -370,9 +382,9 @@ def time_search_space(app, *, steps: int = DEFAULT_STEPS,
     """The app's SearchSpace with its volume objective swapped for the
     simulator — same grids, options, distributions and orders; only
     ``cost_model`` changes, so the tuner runs unchanged. ``engine``
-    picks the batched analytic envelope (default) or the exact event
-    queue (``"event"``, the reference the envelope is validated
-    against)."""
+    picks the batched analytic envelope (default), its device-compiled
+    JAX twin (``"batched-jax"``), or the exact event queue
+    (``"event"``, the reference the envelope is validated against)."""
     base_space = app.search_space
     if base_space is None:
         raise ValueError(f"application {app.name!r} declares no search space")

@@ -20,3 +20,17 @@ except ModuleNotFoundError:
     from repro.testing import hypothesis_fallback
 
     hypothesis_fallback.install()
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def clear_schedule_caches():
+    """Cold schedule caches before and after the test — for tests that
+    assert on cache counters or need cold-build paths (the collectives
+    memos are module-level and otherwise leak across tests)."""
+    from repro.sim.collectives import clear_caches
+
+    clear_caches()
+    yield
+    clear_caches()

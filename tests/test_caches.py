@@ -1,0 +1,191 @@
+"""Schedule-cache lifecycle and fold-stats scoping.
+
+Covers the public cache API of ``repro.sim.collectives`` (``clear_caches``
+/ ``cache_stats`` / FIFO eviction churn with bit-identical rebuilds) and
+the per-run ``fold_stats()`` scopes of ``repro.sim.batch`` (nested and
+concurrent runs must not corrupt each other's counters).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.sim import batch, collectives
+from repro.sim.collectives import (
+    CollectivePattern,
+    build_phases,
+    cache_stats,
+    clear_caches,
+    packed_schedule,
+    schedule_cache_clear,
+)
+
+
+def _ring(p: int) -> CollectivePattern:
+    """A 1-D halo exchange (the ring-neighbor schedule) sized to ``p``."""
+    return CollectivePattern("halo", {"lengths": (16 * p,)})
+
+
+def _snapshot(packed):
+    return {f: np.array(getattr(packed, f))
+            for f in ("phase_map", "starts", "phase_id", "src", "dst",
+                      "nbytes", "fold_rep", "fold_shift")}
+
+
+# ------------------------------------------------------------- cache stats
+def test_cache_stats_counts_hits_and_misses(clear_schedule_caches):
+    s = cache_stats()
+    assert s["packed_hits"] == s["packed_misses"] == 0
+    packed_schedule(_ring(8), (8,))
+    packed_schedule(_ring(8), (8,))
+    s = cache_stats()
+    assert s["packed_misses"] == 1
+    assert s["packed_hits"] == 1
+    assert s["packed_size"] == 1
+
+
+def test_clear_caches_empties_and_zeroes(clear_schedule_caches):
+    packed_schedule(_ring(8), (8,))
+    build_phases(_ring(8), (8,), np.arange(8))
+    assert cache_stats()["packed_size"] == 1
+    clear_caches()
+    s = cache_stats()
+    assert s["packed_size"] == s["phases_size"] == 0
+    assert s["packed_hits"] == s["packed_misses"] == 0
+    assert s["phases_hits"] == s["phases_misses"] == 0
+
+
+def test_schedule_cache_clear_is_alias(clear_schedule_caches):
+    packed_schedule(_ring(8), (8,))
+    schedule_cache_clear()
+    assert cache_stats()["packed_size"] == 0
+
+
+# --------------------------------------------------------- eviction churn
+def test_packed_cache_eviction_rebuilds_bit_identical(
+        clear_schedule_caches, monkeypatch):
+    """Overflowing the FIFO evicts the oldest entries (counted), and a
+    rebuilt schedule is bit-identical to the evicted one."""
+    monkeypatch.setattr(collectives, "_PACKED_CACHE_MAX", 2)
+    first = packed_schedule(_ring(4), (4,))
+    want = _snapshot(first)
+    for p in (8, 16):           # churn the 2-entry cache past (4,)
+        packed_schedule(_ring(p), (p,))
+    s = cache_stats()
+    assert s["packed_evictions"] >= 1
+    assert s["packed_size"] <= 2
+    rebuilt = packed_schedule(_ring(4), (4,))
+    assert rebuilt is not first
+    got = _snapshot(rebuilt)
+    for f, arr in want.items():
+        np.testing.assert_array_equal(arr, got[f], err_msg=f)
+
+
+def test_phases_cache_eviction_rebuilds_bit_identical(
+        clear_schedule_caches, monkeypatch):
+    monkeypatch.setattr(collectives, "_PHASES_CACHE_MAX", 2)
+    rng = np.random.default_rng(0)
+    assigns = [rng.permutation(8) for _ in range(3)]
+    want = [(ph.src.copy(), ph.dst.copy(), ph.nbytes.copy())
+            for ph in build_phases(_ring(8), (8,), assigns[0])]
+    for a in assigns[1:]:       # churn past the first assignment's entry
+        build_phases(_ring(8), (8,), a)
+    assert cache_stats()["phases_evictions"] >= 1
+    got = build_phases(_ring(8), (8,), assigns[0])
+    assert len(got) == len(want)
+    for ph, (src, dst, nbytes) in zip(got, want):
+        np.testing.assert_array_equal(ph.src, src)
+        np.testing.assert_array_equal(ph.dst, dst)
+        np.testing.assert_array_equal(ph.nbytes, nbytes)
+
+
+def test_eviction_keeps_newest_entries(clear_schedule_caches, monkeypatch):
+    monkeypatch.setattr(collectives, "_PACKED_CACHE_MAX", 2)
+    for p in (4, 8, 16):
+        packed_schedule(_ring(p), (p,))
+    before = cache_stats()
+    packed_schedule(_ring(16), (16,))      # newest: must still be cached
+    after = cache_stats()
+    assert after["packed_hits"] == before["packed_hits"] + 1
+
+
+# -------------------------------------------------------------- fold stats
+def _price_something():
+    """One real fold-counted pricing pass (translation-symmetric stack)."""
+    from repro.sim.batch import batch_simulator
+    from repro.sim.cost import spec_for
+
+    eng = batch_simulator(_ring(16), spec_for((4, 4)), (16,),
+                          step_flops=1e9)
+    eng.step_times(np.stack([np.arange(16), np.roll(np.arange(16), 1)]))
+
+
+def test_fold_stats_scope_counts_one_run():
+    with batch.fold_stats() as fs:
+        _price_something()
+    assert fs["pairs_priced"] > 0
+    with batch.fold_stats() as fs2:
+        pass
+    assert fs2["pairs_priced"] == 0        # fresh scope, no leakage
+
+
+def test_fold_stats_nested_scopes_both_count():
+    with batch.fold_stats() as outer:
+        _price_something()
+        inner_before = outer["pairs_priced"]
+        with batch.fold_stats() as inner:
+            _price_something()
+        assert inner["pairs_priced"] > 0
+        assert outer["pairs_priced"] == inner_before + inner["pairs_priced"]
+
+
+def test_fold_stats_global_totals_still_accumulate():
+    batch.fold_stats_reset()
+    with batch.fold_stats():
+        _price_something()
+    assert batch.FOLD_STATS["pairs_priced"] > 0
+    snap = batch.fold_stats_snapshot()
+    assert snap == batch.FOLD_STATS and snap is not batch.FOLD_STATS
+
+
+def test_fold_stats_threads_are_isolated():
+    """A scope opened on one thread never sees another thread's counts
+    (the regression the bare module global allowed)."""
+    results = {}
+
+    def worker(name):
+        with batch.fold_stats() as fs:
+            _price_something()
+            results[name] = dict(fs)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(2)]
+    with batch.fold_stats() as main_scope:
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    # Worker scopes each saw exactly their own run...
+    assert results[0]["pairs_priced"] == results[1]["pairs_priced"] > 0
+    # ...and the main thread's scope saw none of them.
+    assert main_scope["pairs_priced"] == 0
+
+
+def test_fold_stats_keys_stable():
+    assert set(batch.fold_stats_snapshot()) == set(batch.FOLD_STAT_KEYS)
+    with batch.fold_stats() as fs:
+        assert set(fs) == set(batch.FOLD_STAT_KEYS)
+
+
+def test_legacy_reset_zeroes_globals():
+    _price_something()
+    batch.fold_stats_reset()
+    assert all(v == 0 for v in batch.FOLD_STATS.values())
+
+
+def test_fold_stats_scope_closes_on_exception():
+    with pytest.raises(RuntimeError):
+        with batch.fold_stats():
+            raise RuntimeError("boom")
+    with batch.fold_stats() as fs:     # stack must be clean again
+        pass
+    assert fs["pairs_priced"] == 0

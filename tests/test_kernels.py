@@ -173,6 +173,44 @@ def test_wkv6_matches_model_layer():
                                atol=2e-5)
 
 
+# ----------------------------------------------------------- segment rowmax
+@pytest.mark.parametrize("rows,cols,seg", [(5, 512, 1), (8, 512, 8),
+                                           (17, 96, 4), (3, 1024, 64),
+                                           (1, 64, 64)])
+def test_segment_rowmax_shapes(rows, cols, seg):
+    from repro.kernels.segment_reduce import segment_rowmax_pallas
+
+    vals = jnp.abs(jax.random.normal(jax.random.key(0), (rows, cols),
+                                     jnp.float32))
+    out = segment_rowmax_pallas(vals, seg, interpret=True)
+    _assert_close(out, ref.segment_rowmax(vals, seg), jnp.float32)
+
+
+@pytest.mark.parametrize("br,bc", [(4, 64), (8, 128), (16, 512)])
+def test_segment_rowmax_block_sweep(br, bc):
+    from repro.kernels.segment_reduce import segment_rowmax_pallas
+
+    vals = jnp.abs(jax.random.normal(jax.random.key(5), (13, 256),
+                                     jnp.float32))
+    out = segment_rowmax_pallas(vals, 8, br=br, bc=bc, interpret=True)
+    _assert_close(out, ref.segment_rowmax(vals, 8), jnp.float32)
+
+
+def test_segment_rowmax_ops_wrapper():
+    vals = jnp.abs(jax.random.normal(jax.random.key(6), (6, 192),
+                                     jnp.float32))
+    out = ops.segment_rowmax(vals, 4)
+    _assert_close(out, ref.segment_rowmax(vals, 4), jnp.float32)
+
+
+def test_segment_rowmax_seg_one_is_row_max():
+    vals = jnp.abs(jax.random.normal(jax.random.key(7), (9, 300),
+                                     jnp.float32))
+    out = ops.segment_rowmax(vals)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(vals).max(axis=1),
+                               rtol=1e-6)
+
+
 # --------------------------------------------------------------- mamba scan
 @pytest.mark.parametrize("t,di,n,bt", [(64, 16, 8, 32), (128, 24, 8, 64),
                                        (128, 32, 16, 128)])
