@@ -97,9 +97,13 @@ def _trajectory(sections: dict) -> dict:
             jb = res.get("jax_bench") or {}
             jp = res.get("jax_parity") or {}
             par = res.get("engine_parity") or {}
+            pb = res.get("pipeline_bench") or {}
+            cb = res.get("cache_bench") or {}
             row.update({
                 "batched_vs_event_speedup": eng.get("speedup"),
                 "jax_vs_numpy_speedup": jb.get("speedup"),
+                "pipeline_vs_sync_speedup": pb.get("speedup"),
+                "warm_cache_speedup": cb.get("speedup"),
                 "jax_parity_max_rel": jp.get("max_rel_diff"),
                 "engine_parity_max_abs_s": par.get("max_abs_diff_s"),
                 "mean_rank_agreement": res.get("mean_rank_agreement"),

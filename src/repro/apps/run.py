@@ -30,6 +30,16 @@ NumPy reference (same winners, <=1e-6-relative identical seconds):
     PYTHONPATH=src python -m repro.apps.run --all --tune --time --procs 1024
     PYTHONPATH=src python -m repro.apps.run --all --tune --time --backend jax
 
+``--pipeline``/``--no-pipeline`` (with ``--tune --time``) force the
+streaming producer/consumer Phase 3 on or off (default: auto — stream
+when the pricing engine is ``batched-jax``; identical numbers either
+way). ``--cache-dir DIR`` persists placement prices under
+``DIR/prices`` (and, under ``--backend jax``, XLA compiles under
+``DIR/xla``) so re-tunes serve from disk:
+
+    PYTHONPATH=src python -m repro.apps.run --all --tune --time \\
+        --backend jax --pipeline --cache-dir ~/.cache/repro-tune
+
 ``--simulate`` runs each selected app's mapped step through the
 discrete-event simulator (``repro.sim``): the plan's device permutation
 becomes the exact tile->processor assignment, the app's declared
@@ -104,7 +114,8 @@ def _finish(procs: int | None, json_rows: list, failures: list[str],
 
 def tune(selection, procs: int | None, report=print,
          json_path: str | None = None, time_domain: bool = False,
-         backend: str = "numpy") -> int:
+         backend: str = "numpy", pipeline: bool | None = None,
+         cache_dir: str | None = None) -> int:
     """Run the autotuner over the selected apps; nonzero on any failure.
 
     ``time_domain`` swaps each app's volume objective for the batched
@@ -114,7 +125,11 @@ def tune(selection, procs: int | None, report=print,
     ``backend`` picks the pricing engine for the time objective —
     ``"numpy"`` (the bit-exact reference) or ``"jax"`` (the
     device-compiled twin, <=1e-6-relative identical; see
-    docs/simulator.md "Backends").
+    docs/simulator.md "Backends"). ``pipeline`` forces Phase 3's
+    streaming producer/consumer shape on (True) or off (False; None
+    auto-selects it for the JAX engine), and ``cache_dir`` points the
+    persistent price cache + JAX compilation cache at a directory so
+    repeat tunes skip pricing and XLA compiles across processes.
     """
     import time
 
@@ -124,6 +139,28 @@ def tune(selection, procs: int | None, report=print,
         report_lines,
         tune_app,
     )
+
+    price_cache = None
+    if cache_dir is not None:
+        from repro.sim.price_cache import PriceCache
+
+        price_cache = PriceCache(os.path.join(cache_dir, "prices"))
+        report(f"price cache: {price_cache.root}")
+    if time_domain and backend == "jax":
+        from repro.sim.jax_backend import enable_compilation_cache, \
+            platform_info
+
+        if cache_dir is not None:
+            enable_compilation_cache(os.path.join(cache_dir, "xla"))
+        info = platform_info()
+        devices = ",".join(info["devices"]) or "-"
+        report(f"jax backend: platform={info['platform']} "
+               f"devices={info['device_count']}x[{devices}]")
+        if info["pallas_interpret"]:
+            report("warning: JAX resolved to CPU — the Pallas kernel "
+                   "path would run in interpret mode (slow); pricing "
+                   "uses the plain XLA jit here, and accelerator-grade "
+                   "throughput needs a TPU/GPU runtime")
 
     failures = []
     tuned = 0
@@ -158,8 +195,8 @@ def tune(selection, procs: int | None, report=print,
             from repro.sim.cost import time_tuned_app
 
             engine = "batched-jax" if backend == "jax" else "batched"
-            app = time_tuned_app(app, engine=engine)
-        rep = tune_app(app, procs)
+            app = time_tuned_app(app, engine=engine, cache=price_cache)
+        rep = tune_app(app, procs, pipeline=pipeline)
         tuned += 1
         for line in report_lines(rep):
             report(line)
@@ -290,6 +327,20 @@ def main(argv=None) -> int:
                          "(bit-exact reference) or 'jax' (device-compiled, "
                          "<=1e-6-relative identical, fastest on arbitrary "
                          "placements; see docs/simulator.md)")
+    ap.add_argument("--pipeline", dest="pipeline", action="store_true",
+                    default=None,
+                    help="with --tune --time: stream Phase 3 (host "
+                         "candidate expansion overlaps device pricing; "
+                         "default: auto — on for --backend jax)")
+    ap.add_argument("--no-pipeline", dest="pipeline", action="store_false",
+                    help="with --tune --time: force the strict-barrier "
+                         "Phase 3 (expand everything, then one packed "
+                         "pricing sweep)")
+    ap.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="with --tune --time: persistent cache directory "
+                         "— priced placements (DIR/prices) and, with "
+                         "--backend jax, compiled XLA programs (DIR/xla) "
+                         "are reused across processes")
     ap.add_argument("--simulate", action="store_true",
                     help="run each app's mapped step through the "
                          "discrete-event simulator and print the timeline")
@@ -309,6 +360,10 @@ def main(argv=None) -> int:
         ap.error("--time requires --tune")
     if args.backend != "numpy" and not args.time:
         ap.error("--backend requires --tune --time")
+    if args.pipeline is not None and not args.time:
+        ap.error("--pipeline/--no-pipeline requires --tune --time")
+    if args.cache_dir is not None and not args.time:
+        ap.error("--cache-dir requires --tune --time")
     if args.backend == "jax":
         from repro.sim.jax_backend import have_jax
 
@@ -353,7 +408,8 @@ def main(argv=None) -> int:
 
     if args.tune:
         return tune(selection, args.procs, json_path=args.json,
-                    time_domain=args.time, backend=args.backend)
+                    time_domain=args.time, backend=args.backend,
+                    pipeline=args.pipeline, cache_dir=args.cache_dir)
     if args.simulate:
         return simulate(selection, args.procs, json_path=args.json)
 

@@ -42,6 +42,8 @@ import numpy as np
 from repro.core import dsl
 from repro.core.machine import GPU, Machine
 from repro.sim.batch import canonical_assignment, price_stacks
+from repro.sim.price_cache import digest
+from repro.search.pipeline import PriceJob, stream_priced
 from repro.search.space import (
     Candidate,
     CandidateProgram,
@@ -109,6 +111,10 @@ class TuningReport:
     leaderboard: list[ScoredCandidate]
     elapsed_s: float
     note: str = ""
+    #: Wall-clock of Phase 3 alone (variant expansion + placement
+    #: pricing, producer/consumer or barrier) — the region ``pipeline``
+    #: reshapes, and the one the pipeline benchmark compares.
+    phase3_s: float = 0.0
 
     @property
     def oracle_ok(self) -> bool:
@@ -135,6 +141,7 @@ class TuningReport:
             "verified": self.verified,
             "best_ir": self.best_ir,
             "elapsed_s": self.elapsed_s,
+            "phase3_s": self.phase3_s,
             "note": self.note,
         }
 
@@ -195,8 +202,19 @@ def nearest_feasible_procs(space: SearchSpace, n: int, *, count: int = 4,
 
 
 def tune_app(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
-             leaderboard: int = DEFAULT_LEADERBOARD) -> TuningReport:
-    """Search one application's mapper space; returns the full report."""
+             leaderboard: int = DEFAULT_LEADERBOARD,
+             pipeline: bool | None = None) -> TuningReport:
+    """Search one application's mapper space; returns the full report.
+
+    ``pipeline`` controls Phase 3's execution shape: ``True`` streams
+    expansion and pricing through ``repro.search.pipeline`` (host
+    expands group k+1 while the device prices group k), ``False`` keeps
+    the strict barrier (expand everything, then one packed pricing
+    sweep), ``None`` (default) picks the pipeline exactly when the cost
+    model prices on the asynchronous-dispatch JAX engine — the host
+    NumPy engine gains more from the barrier path's cross-group packing
+    than from overlap. Both shapes produce bit-identical reports.
+    """
     space: SearchSpace | None = app.search_space
     if space is None:
         raise ValueError(f"application {app.name!r} declares no search space")
@@ -227,71 +245,113 @@ def tune_app(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
     shortlist = scored[:max(beam, 1)]
     pruned = len(scored) - len(shortlist)
 
-    # Phase 3: variant expansion + vectorized batch evaluation.
+    # Phase 3: variant expansion + batch pricing — as a producer/consumer
+    # pipeline (expansion of group k+1 overlaps device pricing of group
+    # k) or as the legacy barrier, per ``pipeline``; identical numbers
+    # either way.
+    t3 = time.perf_counter()
     evaluated: list[ScoredCandidate] = []
     seen: dict[tuple, ScoredCandidate] = {}
-    # (batch engine, assignment stack, entries) groups, priced in one
-    # registry-wide congestion pass after the beam is fully expanded.
-    beam_groups: list[tuple[object, np.ndarray, list[ScoredCandidate]]] = []
-    for volume, grid, options in shortlist:
-        survivors: list[tuple[ScoredCandidate, np.ndarray]] = []
-        for cand in space.variants(grid, options, machine_shape):
-            program = build_program(machine_shape, cand, f"{app.name}_cand")
-            assign = program.mapper.assignment_grid(cand.grid, use_cache=False)
-            # Dedupe same-(grid, options) variants whose placements are
-            # isomorphic under per-level processor relabeling — identical
-            # port loads, so identical volume, time and locality; distinct
-            # option points stay on the leaderboard even when their
-            # permutations coincide (their volumes differ).
-            key = (cand.grid, cand.options,
-                   canonical_assignment(assign, machine_shape).tobytes())
-            twin = seen.get(key)
-            if twin is not None:  # isomorphic variant already evaluated
-                # Isomorphs tie on every ranking key, so keep the
-                # describe()-minimal one as the class representative —
-                # the winner the pre-dedup sort would have picked,
-                # independent of enumeration order.
-                if cand.describe() < twin.candidate.describe():
-                    twin.candidate = cand
+
+    def expand_jobs():
+        """Walk the shortlist, expand + dedupe variants, and yield one
+        :class:`PriceJob` per beam entry whose placements a batch engine
+        will price. Runs on the pipeline's producer thread (all mutation
+        of ``seen``/``evaluated`` stays on this generator's thread; the
+        consumer only writes ``placed_cost``). Models without a batch
+        pricer fall back inline: the exact event engine prices here,
+        volume models emit nothing and rank by locality alone."""
+        for volume, grid, options in shortlist:
+            survivors: list[tuple[ScoredCandidate, np.ndarray, bytes]] = []
+            for cand in space.variants(grid, options, machine_shape):
+                program = build_program(machine_shape, cand,
+                                        f"{app.name}_cand")
+                assign = program.mapper.assignment_grid(cand.grid,
+                                                        use_cache=False)
+                # Dedupe same-(grid, options) variants whose placements
+                # are isomorphic under per-level processor relabeling —
+                # identical port loads, so identical volume, time and
+                # locality; distinct option points stay on the
+                # leaderboard even when their permutations coincide
+                # (their volumes differ).
+                canon = canonical_assignment(assign,
+                                             machine_shape).tobytes()
+                key = (cand.grid, cand.options, canon)
+                twin = seen.get(key)
+                if twin is not None:  # isomorphic variant already seen
+                    # Isomorphs tie on every ranking key, so keep the
+                    # describe()-minimal one as the class representative
+                    # — the winner the pre-dedup sort would have picked,
+                    # independent of enumeration order.
+                    if cand.describe() < twin.candidate.describe():
+                        twin.candidate = cand
+                    continue
+                flat = assign.reshape(-1)
+                bijective = flat.size == n and len(np.unique(flat)) == n
+                node_grid = assign // machine_shape[1]
+                entry = ScoredCandidate(
+                    candidate=cand,
+                    volume=volume,
+                    evaluated=True,
+                    bijective=bijective,
+                    cross_node=cross_node_fraction(node_grid),
+                    eval_path=program.mapper.last_eval_path,
+                )
+                seen[key] = entry
+                evaluated.append(entry)
+                if bijective:
+                    survivors.append((entry, np.asarray(assign), canon))
+            # Time-domain models price the surviving beam's ACTUAL
+            # placements through the batch engine; volume models keep
+            # ranking variants by locality alone.
+            if not survivors:
                 continue
-            flat = assign.reshape(-1)
-            bijective = flat.size == n and len(np.unique(flat)) == n
-            node_grid = assign // machine_shape[1]
-            entry = ScoredCandidate(
-                candidate=cand,
-                volume=volume,
-                evaluated=True,
-                bijective=bijective,
-                cross_node=cross_node_fraction(node_grid),
-                eval_path=program.mapper.last_eval_path,
-            )
-            seen[key] = entry
-            evaluated.append(entry)
-            if bijective:
-                survivors.append((entry, np.asarray(assign)))
-        # Time-domain models price the surviving beam's ACTUAL placements
-        # through the batch engine; volume models keep ranking variants by
-        # locality alone.
-        if not survivors:
-            continue
-        model = space.cost_model(n, dict(options))
-        engine = getattr(model, "beam_pricer", lambda g: None)(grid)
-        stack = np.stack([a for _, a in survivors])
-        entries = [e for e, _ in survivors]
-        if engine is not None:
-            beam_groups.append((engine, stack, entries))
-        elif hasattr(model, "price_assignments"):
-            # Per-group fallback (e.g. the exact event engine).
-            for entry, t in zip(entries,
-                                model.price_assignments(grid, stack)):
+            model = space.cost_model(n, dict(options))
+            engine = getattr(model, "beam_pricer", lambda g: None)(grid)
+            stack = np.stack([a for _, a, _ in survivors])
+            entries = [e for e, _, _ in survivors]
+            if engine is not None:
+                cache = getattr(model, "cache", None)
+                table = rows = None
+                if cache is not None:
+                    # Row digests reuse the dedup pass's canonical
+                    # bytes — the cache key costs nothing extra here.
+                    table = model.price_table_key(grid)
+                    rows = [digest(c) for _, _, c in survivors]
+                yield PriceJob(engine=engine, stack=stack, entries=entries,
+                               table=table, rows=rows, cache=cache)
+            elif hasattr(model, "price_assignments"):
+                # Per-group fallback (e.g. the exact event engine).
+                for entry, t in zip(entries,
+                                    model.price_assignments(grid, stack)):
+                    entry.placed_cost = float(t)
+
+    if pipeline is None:
+        probe = space.cost_model(n, dict(shortlist[0][2]))
+        pipeline = getattr(probe, "engine", None) == "batched-jax"
+    if pipeline:
+        for job, times in stream_priced(expand_jobs()):
+            for entry, t in zip(job.entries, times):
                 entry.placed_cost = float(t)
-    if beam_groups:
-        # All shortlisted grids x options in one candidates x phases x
-        # ports pricing sweep.
-        priced = price_stacks([(e, s) for e, s, _ in beam_groups])
-        for (_, _, entries), times in zip(beam_groups, priced):
-            for entry, t in zip(entries, times):
-                entry.placed_cost = float(t)
+    else:
+        beam_groups = list(expand_jobs())
+        if beam_groups:
+            # All shortlisted grids x options in one candidates x phases
+            # x ports pricing sweep, cache hits excluded up front.
+            splits = [job.split_cached() for job in beam_groups]
+            priced = price_stacks([
+                (job.engine,
+                 job.stack[np.asarray(miss, dtype=np.intp)])
+                for job, (_, miss) in zip(beam_groups, splits)
+            ])
+            for job, (times, miss), values in zip(beam_groups, splits,
+                                                  priced):
+                if miss:
+                    times[np.asarray(miss, dtype=np.intp)] = values
+                    job.store(miss, values)
+                for entry, t in zip(job.entries, times):
+                    entry.placed_cost = float(t)
+    phase3_s = time.perf_counter() - t3
     ranked = sorted(
         (s for s in evaluated if s.bijective),
         key=lambda s: (s.rank_cost, s.cross_node, s.candidate.describe()),
@@ -354,15 +414,17 @@ def tune_app(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
         oracle=oracle,
         leaderboard=ranked[:leaderboard],
         elapsed_s=time.perf_counter() - t0,
+        phase3_s=phase3_s,
         note=note,
     )
 
 
 def tune_registry(applications: Iterable, procs: int | None = None,
-                  *, beam: int = DEFAULT_BEAM) -> list[TuningReport]:
+                  *, beam: int = DEFAULT_BEAM,
+                  pipeline: bool | None = None) -> list[TuningReport]:
     """Tune every application that declares a search space."""
     return [
-        tune_app(app, procs, beam=beam)
+        tune_app(app, procs, beam=beam, pipeline=pipeline)
         for app in applications
         if getattr(app, "search_space", None) is not None
     ]

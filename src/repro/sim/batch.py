@@ -82,6 +82,13 @@ FOLD_STAT_KEYS = (
 #: a reset in one run silently corrupts another run's readings.
 FOLD_STATS = {key: 0 for key in FOLD_STAT_KEYS}
 
+#: Guards the global totals: the streaming tuner pipeline prices on a
+#: consumer thread while the producer expands candidates, so the legacy
+#: dict would race its read-modify-write increments without it. The
+#: thread-local scope stacks need no lock (each thread sees only its
+#: own), and per-key increments merge atomically under the lock.
+_FOLD_LOCK = threading.Lock()
+
 _FOLD_SCOPES = threading.local()
 
 
@@ -93,10 +100,13 @@ def _fold_scopes() -> list[dict]:
 
 
 def _count(key: str, n: int) -> None:
-    """Bump one fold counter: the global totals plus every counter opened
-    by this thread's active :func:`fold_stats` scopes (so nested scopes
-    each see the events of the work they wrap)."""
-    FOLD_STATS[key] += n
+    """Bump one fold counter: the global totals (lock-protected — the
+    pipeline's producer and consumer threads price concurrently) plus
+    every counter opened by this thread's active :func:`fold_stats`
+    scopes (so nested scopes each see the events of the work they
+    wrap)."""
+    with _FOLD_LOCK:
+        FOLD_STATS[key] += n
     for counter in _fold_scopes():
         counter[key] += n
 
@@ -129,8 +139,26 @@ def fold_stats_snapshot() -> dict:
 def fold_stats_reset() -> None:
     """Zero the global :data:`FOLD_STATS` totals (legacy API; prefer the
     :func:`fold_stats` scope, which needs no reset)."""
-    for key in FOLD_STATS:
-        FOLD_STATS[key] = 0
+    with _FOLD_LOCK:
+        for key in FOLD_STATS:
+            FOLD_STATS[key] = 0
+
+
+class ReadyPrices:
+    """An already-materialized pricing result behind the async handle
+    protocol (``result()``): the host NumPy engine computes eagerly on
+    the calling thread, so its "handle" is just the finished array. The
+    JAX engine overrides :meth:`BatchSimulator.step_times_async` with a
+    genuinely deferred handle (device dispatch returns before the XLA
+    program finishes)."""
+
+    __slots__ = ("_value",)
+
+    def __init__(self, value: np.ndarray) -> None:
+        self._value = value
+
+    def result(self) -> np.ndarray:
+        return self._value
 
 
 def _divisors(n: int) -> list[int]:
@@ -384,6 +412,18 @@ class BatchSimulator:
         return float(self.step_times(
             np.asarray(assignment, dtype=np.int64).reshape(1, -1))[0])
 
+    def step_times_async(self, assignments: np.ndarray, *,
+                         fold: bool = True,
+                         incremental: bool = True) -> ReadyPrices:
+        """Asynchronous-dispatch twin of :meth:`step_times`: returns a
+        handle whose ``result()`` yields the (N,) step times. The host
+        engine computes eagerly (NumPy has no deferred execution — but
+        its pricing releases the GIL, so a pipeline's producer thread
+        still overlaps it); the JAX engine overrides this to dispatch
+        the compiled program and return before the device finishes."""
+        return ReadyPrices(self.step_times(
+            assignments, fold=fold, incremental=incremental))
+
 
 def price_stacks(stacks: Sequence[tuple["BatchSimulator", np.ndarray]],
                  *, fold: bool = True,
@@ -472,6 +512,32 @@ def price_stacks(stacks: Sequence[tuple["BatchSimulator", np.ndarray]],
     return [np.asarray(o) for o in out]
 
 
+def iter_price_stacks(stacks: Sequence[tuple["BatchSimulator", np.ndarray]],
+                      *, fold: bool = True,
+                      incremental: bool = True
+                      ) -> Iterator[tuple[int, np.ndarray]]:
+    """Streaming entry point: yield ``(index, step_times)`` per group as
+    each finishes, dispatching every group asynchronously up front.
+
+    Where :func:`price_stacks` is a strict barrier (nothing returns until
+    the whole beam is priced), this generator lets a consumer merge
+    results group by group while later groups are still pricing — on the
+    JAX engine the dispatches queue on the device and the host only
+    blocks per-group at ``result()``. Values are identical to
+    :func:`price_stacks` (each group prices from its own endpoint
+    arrays into independent buckets; packing groups together never
+    changed the arithmetic). The tuner's pipelined Phase 3
+    (``repro.search.pipeline``) is the primary consumer.
+    """
+    handles = [
+        (i, engine.step_times_async(assigns, fold=fold,
+                                    incremental=incremental))
+        for i, (engine, assigns) in enumerate(stacks)
+    ]
+    for i, handle in handles:
+        yield i, np.asarray(handle.result())
+
+
 def batch_simulator(pattern: CollectivePattern, spec: MachineSpec,
                     grid: Sequence[int], *, step_flops: float,
                     elem_bytes: int = 4, backpressure: int = 2,
@@ -535,10 +601,12 @@ __all__ = [
     "BatchSimulator",
     "FOLD_STATS",
     "FOLD_STAT_KEYS",
+    "ReadyPrices",
     "batch_simulator",
     "canonical_assignment",
     "fold_stats",
     "fold_stats_reset",
     "fold_stats_snapshot",
+    "iter_price_stacks",
     "price_stacks",
 ]

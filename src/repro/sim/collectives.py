@@ -68,6 +68,21 @@ _CACHE_STATS = {
     "phases_hits": 0, "phases_misses": 0, "phases_evictions": 0,
 }
 
+#: Auxiliary caches that want to ride the sim-wide ``clear_caches()`` /
+#: ``cache_stats()`` surface: name -> (clear_fn, stats_fn). The JAX
+#: backend registers its per-schedule ``_ScheduleExport`` cache and the
+#: price cache registers its open on-disk tables here, so one call
+#: reclaims every sim-side memo between tuning runs and one snapshot
+#: shows every hit rate.
+_EXTRA_CACHES: dict = {}
+
+
+def register_cache(name: str, clear_fn, stats_fn) -> None:
+    """Attach an auxiliary cache to :func:`clear_caches` (``clear_fn``,
+    zero-arg) and :func:`cache_stats` (``stats_fn`` returning a dict,
+    reported under ``name``). Re-registering a name replaces it."""
+    _EXTRA_CACHES[name] = (clear_fn, stats_fn)
+
 
 @dataclasses.dataclass(frozen=True)
 class Phase:
@@ -741,11 +756,14 @@ def build_phases(pattern: CollectivePattern, grid: Sequence[int],
 
 def clear_caches() -> None:
     """Drop every memoized schedule — the two FIFO memos and the three
-    phase-shape ``lru_cache``s — and zero ``cache_stats()`` counters.
+    phase-shape ``lru_cache``s — plus every registered auxiliary cache
+    (the JAX backend's compiled ``_ScheduleExport``s, the price cache's
+    in-memory tables), and zero ``cache_stats()`` counters.
 
     Rebuilds after a clear are bit-identical (the builders are pure
-    functions of their keys); test fixtures and benchmarks call this to
-    isolate timings and exercise cold paths.
+    functions of their keys, the price cache reloads from disk); test
+    fixtures and benchmarks call this to isolate timings, exercise cold
+    paths, and reclaim memory between tuning runs.
     """
     _PACKED_CACHE.clear()
     _PHASES_CACHE.clear()
@@ -754,6 +772,8 @@ def clear_caches() -> None:
     _tree_rounds.cache_clear()
     for k in _CACHE_STATS:
         _CACHE_STATS[k] = 0
+    for clear_fn, _ in _EXTRA_CACHES.values():
+        clear_fn()
 
 
 def schedule_cache_clear() -> None:
@@ -775,6 +795,8 @@ def cache_stats() -> dict:
         info = fn.cache_info()
         stats[name] = {"hits": info.hits, "misses": info.misses,
                        "size": info.currsize, "max": info.maxsize}
+    for name, (_, stats_fn) in _EXTRA_CACHES.items():
+        stats[name] = dict(stats_fn())
     return stats
 
 
@@ -789,6 +811,7 @@ __all__ = [
     "clear_caches",
     "expand_packed",
     "packed_schedule",
+    "register_cache",
     "ring_allgather",
     "ring_allreduce",
     "ring_reduce_scatter",

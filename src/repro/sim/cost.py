@@ -31,13 +31,19 @@ import numpy as np
 
 from repro.core.commvolume import CostModel
 from repro.core.machine import GPU, MachineSpec
-from repro.sim.batch import BatchSimulator, batch_simulator
+from repro.sim.batch import (
+    BatchSimulator,
+    batch_simulator,
+    canonical_assignment,
+)
 from repro.sim.collectives import (
     CollectivePattern,
     Phase,
+    _pattern_key,
     build_phases,
     schedule_transfer_bound,
 )
+from repro.sim.price_cache import PriceCache, digest
 from repro.sim.engine import Timeline, simulate_steps
 from repro.sim.topology import Topology
 
@@ -174,6 +180,17 @@ class SimulatedTimeCostModel(CostModel):
     #: (same numbers to <=1e-6 relative; see docs/simulator.md) | "event"
     #: exact queue.
     engine: str = "batched"
+    #: Pricing precision of the batched-jax engine ("float64" matches the
+    #: NumPy reference bit-for-bit under the parity gates; "float32" is
+    #: the opt-in lossy mode). Ignored by the host engines.
+    dtype: str = "float64"
+    #: Optional persistent price store (``repro.sim.price_cache``):
+    #: placements whose canonical form was ever priced under this model's
+    #: table key short-circuit to a dict lookup — across processes.
+    #: Excluded from equality/hash (a cache is an accelerator, not part
+    #: of the model's identity).
+    cache: PriceCache | None = dataclasses.field(
+        default=None, compare=False, repr=False)
     name = "simulated_time"
 
     def __post_init__(self) -> None:
@@ -182,6 +199,42 @@ class SimulatedTimeCostModel(CostModel):
                 f"engine must be 'batched', 'batched-jax' or 'event', "
                 f"got {self.engine!r}"
             )
+
+    @property
+    def value_tag(self) -> str:
+        """Which bit-for-bit value family this model prices in. The
+        price cache promises byte-stable reads, and the engines agree
+        only to tolerance (NumPy vs XLA f64 ~1e-15, f32 ~1e-5), so each
+        family owns its own cache tables."""
+        if self.engine == "batched-jax":
+            return "jax-f32" if self.dtype == "float32" else "jax-f64"
+        return "event-f64" if self.engine == "event" else "numpy-f64"
+
+    def price_table_key(self, grid: Sequence[int]) -> bytes:
+        """The price-cache table digest for one candidate grid: every
+        determinant of a step time except the placement. Computable
+        without building the schedule — that is what lets a warm cache
+        skip the schedule build *and* the pricing."""
+        grid = tuple(int(g) for g in grid)
+        compute_s = self.step_flops / (self.spec.nprocs
+                                       * self.spec.peak_flops)
+        return digest(
+            repr(_pattern_key(self.pattern)).encode(),
+            repr(grid).encode(),
+            repr(self.spec).encode(),
+            repr((self.elem_bytes, self.steps, self.backpressure,
+                  float(compute_s))).encode(),
+            self.value_tag.encode(),
+        )
+
+    def price_row_key(self, grid: Sequence[int],
+                      assign: np.ndarray) -> bytes:
+        """The cache row digest of one placement: its isomorphism-class
+        representative's bytes (congestion pricing is invariant under
+        per-level relabeling, so the whole class shares one row)."""
+        canon = canonical_assignment(np.asarray(assign, dtype=np.int64),
+                                     self.spec.shape)
+        return digest(canon.tobytes())
 
     def _validate(self, factors: Sequence[int]) -> tuple[int, ...]:
         grid = tuple(int(f) for f in factors)
@@ -214,6 +267,15 @@ class SimulatedTimeCostModel(CostModel):
         assign = self._default_assignment(grid)
         if self.engine == "event":
             return self.simulate(grid, assign).per_step_time()
+        if self.cache is not None:
+            table = self.price_table_key(grid)
+            row = self.price_row_key(grid, assign)
+            hit = self.cache.get(table, row)
+            if hit is not None:
+                return hit
+            value = self.batch(grid).step_time(assign)
+            self.cache.put(table, row, value)
+            return value
         return self.batch(grid).step_time(assign)
 
     def batch(self, grid: tuple[int, ...]) -> BatchSimulator:
@@ -229,7 +291,7 @@ class SimulatedTimeCostModel(CostModel):
         if self.engine == "batched-jax":
             from repro.sim.jax_backend import to_jax
 
-            return to_jax(eng)
+            return to_jax(eng, dtype=self.dtype)
         return eng
 
     def beam_pricer(self, factors: Sequence[int]) -> BatchSimulator | None:
@@ -378,13 +440,17 @@ def simulate_app(app, procs: int | None = None, *,
 
 def time_search_space(app, *, steps: int = DEFAULT_STEPS,
                       elem_bytes: int = DEFAULT_ELEM_BYTES,
-                      engine: str = "batched"):
+                      engine: str = "batched", dtype: str = "float64",
+                      cache: PriceCache | None = None):
     """The app's SearchSpace with its volume objective swapped for the
     simulator — same grids, options, distributions and orders; only
     ``cost_model`` changes, so the tuner runs unchanged. ``engine``
     picks the batched analytic envelope (default), its device-compiled
     JAX twin (``"batched-jax"``), or the exact event queue
-    (``"event"``, the reference the envelope is validated against)."""
+    (``"event"``, the reference the envelope is validated against);
+    ``dtype`` selects the JAX engine's precision and ``cache`` threads a
+    persistent :class:`~repro.sim.price_cache.PriceCache` through every
+    produced model."""
     base_space = app.search_space
     if base_space is None:
         raise ValueError(f"application {app.name!r} declares no search space")
@@ -402,6 +468,8 @@ def time_search_space(app, *, steps: int = DEFAULT_STEPS,
             elem_bytes=elem_bytes,
             steps=steps,
             engine=engine,
+            dtype=dtype,
+            cache=cache,
         )
 
     return dataclasses.replace(base_space, cost_model=cost_model)
@@ -409,7 +477,8 @@ def time_search_space(app, *, steps: int = DEFAULT_STEPS,
 
 def time_tuned_app(app, *, steps: int = DEFAULT_STEPS,
                    elem_bytes: int = DEFAULT_ELEM_BYTES,
-                   engine: str = "batched"):
+                   engine: str = "batched", dtype: str = "float64",
+                   cache: PriceCache | None = None):
     """A copy of ``app`` whose tuner searches predicted seconds. The
     legacy volume-pair oracle is dropped from the copy (its units are
     elements, not seconds); ``benchmarks/sim_eval.py`` re-checks the
@@ -417,7 +486,8 @@ def time_tuned_app(app, *, steps: int = DEFAULT_STEPS,
     return dataclasses.replace(
         app,
         search_space=time_search_space(app, steps=steps,
-                                       elem_bytes=elem_bytes, engine=engine),
+                                       elem_bytes=elem_bytes, engine=engine,
+                                       dtype=dtype, cache=cache),
         tuning=None,
     )
 

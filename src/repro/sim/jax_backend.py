@@ -56,17 +56,19 @@ speed, and on this engine the compiled dense pass is the fast path.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from contextlib import nullcontext
 from typing import Sequence
 
 import numpy as np
 
 from repro.core.machine import MachineSpec
-from repro.sim.batch import BatchSimulator, _count
+from repro.sim.batch import BatchSimulator, ReadyPrices, _count
 from repro.sim.collectives import (
     CollectivePattern,
     PackedSchedule,
     packed_schedule,
+    register_cache,
 )
 from repro.sim.topology import Topology
 
@@ -94,6 +96,42 @@ _DTYPES = ("float64", "float32")
 def have_jax() -> bool:
     """True when the JAX backend can be constructed in this process."""
     return jax is not None
+
+
+def platform_info() -> dict:
+    """What this process's JAX runtime resolved to: platform name, device
+    count and kinds, and whether the Pallas kernel would run in interpret
+    mode (it does on CPU — a correctness path, slower than the plain jit).
+    ``repro.apps.run --backend jax`` prints this so a CPU fallback is
+    never silent."""
+    if jax is None:
+        return {"available": False}
+    devices = jax.devices()
+    platform = jax.default_backend()
+    return {
+        "available": True,
+        "platform": platform,
+        "device_count": len(devices),
+        "devices": [d.device_kind for d in devices],
+        "pallas_interpret": platform == "cpu",
+    }
+
+
+def enable_compilation_cache(path: str) -> None:
+    """Point JAX's persistent compilation cache at ``path`` so repeat
+    tunes in fresh processes skip XLA compilation entirely. Thresholds
+    are dropped to zero because this engine's programs are many and
+    individually quick to compile — exactly the population the default
+    min-compile-time filter would decline to cache."""
+    if jax is None:  # pragma: no cover - guarded by have_jax() upstream
+        return
+    jax.config.update("jax_compilation_cache_dir", str(path))
+    for knob, val in (("jax_persistent_cache_min_entry_size_bytes", -1),
+                      ("jax_persistent_cache_min_compile_time_secs", 0.0)):
+        try:
+            jax.config.update(knob, val)
+        except Exception:  # noqa: BLE001 - knob absent on this jax version
+            pass
 
 
 def _x64(dtype: str):
@@ -172,16 +210,23 @@ class _ScheduleExport:
         return _pow2_floor(max(1, _MAX_DEVICE_ELEMS // max(cells, 1)))
 
     # ------------------------------------------------- compiled callables
-    def fn(self, mode: str, dtype: str, use_pallas: bool):
-        key = (mode, dtype, use_pallas)
+    def fn(self, mode: str, dtype: str, use_pallas: bool,
+           donate: bool = False):
+        """The jitted pricing callable for one formulation. ``donate``
+        hands the chunk's device input buffer to XLA for reuse — worth it
+        only when a stack spans several chunks (each chunk's input is
+        dead the moment its program launches) and only off-CPU (the CPU
+        backend does not implement donation and warns)."""
+        key = (mode, dtype, use_pallas, donate)
         hit = self._fns.get(key)
         if hit is None:
             dt = jnp.float64 if dtype == "float64" else jnp.float32
             if mode == "dense":
-                hit = (self._build_dense_pallas(dt) if use_pallas
+                raw = (self._build_dense_pallas(dt) if use_pallas
                        else self._build_dense(dt))
             else:
-                hit = self._build_scatter(dt)
+                raw = self._build_scatter(dt)
+            hit = jax.jit(raw, donate_argnums=(0,) if donate else ())
             self._fns[key] = hit
         return hit
 
@@ -236,7 +281,7 @@ class _ScheduleExport:
                     )
             return out
 
-        return jax.jit(jax.vmap(row))
+        return jax.vmap(row)
 
     def _build_dense_pallas(self, dt):
         """Dense mode with the per-level reduction routed through the
@@ -291,7 +336,7 @@ class _ScheduleExport:
                         i += 1
             return out
 
-        return jax.jit(fn)
+        return fn
 
     def _build_scatter(self, dt):
         """The general formulation: masked segment-sum scatter-adds into
@@ -325,7 +370,36 @@ class _ScheduleExport:
                 )
             return out
 
-        return jax.jit(jax.vmap(row))
+        return jax.vmap(row)
+
+
+#: Live schedules carrying a ``_jax_exports`` cache, held weakly (by
+#: ``id`` — PackedSchedule's ndarray fields make it unhashable, ruling
+#: out a WeakSet; dead ids are pruned automatically and a recycled id
+#: simply overwrites) plus hit/miss counters, so ``repro.sim
+#: .collectives.cache_stats()`` can report the compiled-program
+#: population and ``clear_caches()`` can reclaim it.
+_EXPORT_HOSTS: "weakref.WeakValueDictionary[int, PackedSchedule]" = \
+    weakref.WeakValueDictionary()
+_EXPORT_STATS = {"hits": 0, "misses": 0}
+
+
+def _exports_clear() -> None:
+    for sched in list(_EXPORT_HOSTS.values()):
+        cache = getattr(sched, "_jax_exports", None)
+        if cache:
+            cache.clear()
+    for key in _EXPORT_STATS:
+        _EXPORT_STATS[key] = 0
+
+
+def _exports_stats() -> dict:
+    size = sum(len(getattr(sched, "_jax_exports", ()) or ())
+               for sched in _EXPORT_HOSTS.values())
+    return {"size": size, **_EXPORT_STATS}
+
+
+register_cache("jax_exports", _exports_clear, _exports_stats)
 
 
 def _export_for(sched: PackedSchedule, topo: Topology) -> _ScheduleExport:
@@ -336,11 +410,36 @@ def _export_for(sched: PackedSchedule, topo: Topology) -> _ScheduleExport:
     if cache is None:
         cache = {}
         object.__setattr__(sched, "_jax_exports", cache)
+        _EXPORT_HOSTS[id(sched)] = sched
     key = (topo.spec, topo.alphas, topo.betas)
     hit = cache.get(key)
     if hit is None:
+        _EXPORT_STATS["misses"] += 1
         hit = cache[key] = _ScheduleExport(sched, topo)
+    else:
+        _EXPORT_STATS["hits"] += 1
     return hit
+
+
+_SHARDINGS: dict = {}
+
+
+def _device_put_chunk(blk: np.ndarray):
+    """Stage one candidate chunk on device. Multi-device hosts shard the
+    leading (candidate) axis — rows are independent under ``vmap``, so
+    jit partitions the whole program with no cross-device traffic; chunk
+    shapes are powers of two, so any power-of-two device count divides
+    them. Uneven or single-device cases fall back to one replica."""
+    devices = jax.devices()
+    nd = len(devices)
+    if nd > 1 and blk.shape[0] % nd == 0:
+        sharding = _SHARDINGS.get(nd)
+        if sharding is None:
+            mesh = jax.sharding.Mesh(np.asarray(devices), ("candidates",))
+            sharding = _SHARDINGS[nd] = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec("candidates"))
+        return jax.device_put(blk, sharding)
+    return jnp.asarray(blk)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -391,17 +490,28 @@ class JaxBatchSimulator(BatchSimulator):
                n * int((np.diff(sched.starts) > 0).sum()))
         return slab_times[:, sched.phase_map]
 
-    def _slab_times(self, a: np.ndarray) -> np.ndarray:
+    def _dispatch_slabs(self, a: np.ndarray) -> list[tuple]:
+        """Launch the stack's chunked pricing programs and return the
+        in-flight ``(device_output, take)`` pairs without waiting.
+
+        JAX dispatch is asynchronous on every backend: each ``fn`` call
+        returns as soon as the program is enqueued, so by the time the
+        first chunk finishes the rest are already queued behind it —
+        double-buffered by the runtime — and the host is free to expand
+        the next candidate group. Oversize stacks that split into
+        several chunks donate each chunk's input buffer back to XLA
+        (off-CPU only; the CPU backend does not implement donation)."""
         exp = _export_for(self.schedule, self.topology)
         mode = exp.mode
         if mode == "dense" and not _rows_bijective(a, exp.nprocs):
             mode = "scatter"      # dense needs invertible rows
         n = a.shape[0]
         chunk = min(exp.chunk(mode), _pow2_floor(2 * n - 1) if n else 1)
-        out = np.empty((n, exp.u), dtype=np.float64)
+        donate = n > chunk and jax.default_backend() != "cpu"
         a32 = np.ascontiguousarray(a, dtype=np.int32)
+        parts: list[tuple] = []
         with _x64(self.dtype):
-            fn = exp.fn(mode, self.dtype, self.use_pallas)
+            fn = exp.fn(mode, self.dtype, self.use_pallas, donate)
             for lo in range(0, n, chunk):
                 blk = a32[lo:lo + chunk]
                 take = blk.shape[0]
@@ -409,9 +519,72 @@ class JaxBatchSimulator(BatchSimulator):
                     blk = np.concatenate(
                         [blk, np.broadcast_to(blk[-1:],
                                               (chunk - take, blk.shape[1]))])
-                res = np.asarray(fn(jnp.asarray(blk)))
-                out[lo:lo + take] = res[:take]
+                parts.append((fn(_device_put_chunk(blk)), take))
+        return parts
+
+    @staticmethod
+    def _collect_slabs(parts: list[tuple], n: int, u: int) -> np.ndarray:
+        """Block on the in-flight chunk programs (oldest first — the
+        device finishes them in dispatch order) and assemble the full
+        (N, n_unique) slab-time matrix on the host."""
+        out = np.empty((n, u), dtype=np.float64)
+        lo = 0
+        for dev, take in parts:
+            out[lo:lo + take] = np.asarray(dev)[:take]
+            lo += take
         return out
+
+    def _slab_times(self, a: np.ndarray) -> np.ndarray:
+        exp = _export_for(self.schedule, self.topology)
+        return self._collect_slabs(self._dispatch_slabs(a), a.shape[0],
+                                   exp.u)
+
+    def step_times_async(self, assignments: np.ndarray, *,
+                         fold: bool = True,
+                         incremental: bool = True) -> "ReadyPrices":
+        """Dispatch the whole stack's pricing and return immediately with
+        a deferred handle; ``result()`` blocks on the device outputs and
+        closes the step recurrence. Between dispatch and ``result()`` the
+        host is free — this is the overlap the tuner's streaming pipeline
+        lives on. Values are bit-identical to :meth:`step_times` (same
+        programs, same chunking; only the wait moves)."""
+        del fold, incremental     # moot — see phase_durations
+        a = self._flat_assignments(assignments)
+        n, sched = a.shape[0], self.schedule
+        if sched.n_transfers == 0 or n == 0 or sched.n_phases == 0:
+            return ReadyPrices(self._close_steps(
+                np.zeros((n, sched.n_phases), dtype=np.float64)))
+        parts = self._dispatch_slabs(a)
+        _count("pairs_priced",
+               n * int((np.diff(sched.starts) > 0).sum()))
+        return _InFlightPrices(self, parts, n)
+
+
+class _InFlightPrices:
+    """Deferred step times of one dispatched stack: the chunk programs
+    are already running on the device; ``result()`` blocks on their
+    outputs (oldest chunk first), assembles slab times, and closes the
+    step recurrence. Idempotent — the device buffers are dropped after
+    the first materialization."""
+
+    __slots__ = ("_sim", "_parts", "_n", "_value")
+
+    def __init__(self, sim: "JaxBatchSimulator", parts: list[tuple],
+                 n: int) -> None:
+        self._sim = sim
+        self._parts = parts
+        self._n = n
+        self._value: np.ndarray | None = None
+
+    def result(self) -> np.ndarray:
+        if self._value is None:
+            sim = self._sim
+            sched = sim.schedule
+            exp = _export_for(sched, sim.topology)
+            slab_times = sim._collect_slabs(self._parts, self._n, exp.u)
+            self._parts = []
+            self._value = sim._close_steps(slab_times[:, sched.phase_map])
+        return self._value
 
 
 def to_jax(engine: BatchSimulator, *, dtype: str = "float64",
@@ -448,7 +621,9 @@ def jax_batch_simulator(pattern: CollectivePattern, spec: MachineSpec,
 
 __all__ = [
     "JaxBatchSimulator",
+    "enable_compilation_cache",
     "have_jax",
     "jax_batch_simulator",
+    "platform_info",
     "to_jax",
 ]

@@ -1,0 +1,158 @@
+"""Tests for the persistent pricing cache (repro.sim.price_cache)."""
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import apps
+from repro.sim.collectives import cache_stats, clear_caches
+from repro.sim.cost import time_tuned_app
+from repro.sim.price_cache import _REC, _MAGIC, PriceCache, digest
+from repro.search.tuner import tune_app
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _table_file(cache: PriceCache) -> Path:
+    files = sorted(cache.root.glob("*.price"))
+    assert files, "no table file written"
+    return files[0]
+
+
+# ------------------------------------------------------------------- basics
+def test_round_trip_and_idempotent_put(tmp_path):
+    cache = PriceCache(tmp_path)
+    t, r = digest(b"table"), digest(b"row")
+    assert cache.get(t, r) is None
+    cache.put(t, r, 3.5)
+    cache.put(t, r, 3.5)            # duplicate: no second record
+    assert cache.get(t, r) == 3.5
+    assert cache.stats()["writes"] == 1
+    size = _table_file(cache).stat().st_size
+    assert size == len(_MAGIC) + _REC.size
+
+
+def test_distinct_digests_for_framing():
+    assert digest(b"ab", b"c") != digest(b"a", b"bc")
+    assert digest(b"x") != digest(b"x", b"")
+
+
+def test_fresh_process_round_trip(tmp_path):
+    """A value written by one process is served to another — the
+    cross-run promise the warm-re-tune speedup rests on."""
+    snippet = f"""
+import sys; sys.path.insert(0, {str(REPO / "src")!r})
+from repro.sim.price_cache import PriceCache, digest
+c = PriceCache({str(tmp_path)!r})
+c.put(digest(b"t"), digest(b"r"), 1.75)
+"""
+    subprocess.run([sys.executable, "-c", snippet], check=True)
+    cache = PriceCache(tmp_path)
+    assert cache.get(digest(b"t"), digest(b"r")) == 1.75
+
+
+# -------------------------------------------------------------- resilience
+def test_corrupt_record_drops_tail_keeps_prefix(tmp_path):
+    cache = PriceCache(tmp_path)
+    t = digest(b"table")
+    rows = [digest(bytes([i])) for i in range(3)]
+    cache.put_many(t, [(r, float(i)) for i, r in enumerate(rows)])
+    path = _table_file(cache)
+    blob = bytearray(path.read_bytes())
+    # Flip one byte inside the SECOND record's value field.
+    off = len(_MAGIC) + _REC.size + 20
+    blob[off] ^= 0xFF
+    path.write_bytes(bytes(blob))
+    fresh = PriceCache(tmp_path)
+    assert fresh.get(t, rows[0]) == 0.0          # intact prefix survives
+    assert fresh.get(t, rows[1]) is None         # corrupted -> miss
+    assert fresh.get(t, rows[2]) is None         # past the tear -> miss
+    assert fresh.stats()["dropped"] == 1
+    # The miss re-prices live and re-persists.
+    fresh.put(t, rows[1], 1.0)
+    assert PriceCache(tmp_path).get(t, rows[1]) == 1.0
+
+
+def test_stale_magic_treated_as_empty(tmp_path):
+    cache = PriceCache(tmp_path)
+    t, r = digest(b"t"), digest(b"r")
+    cache.put(t, r, 2.0)
+    path = _table_file(cache)
+    path.write_bytes(b"RPRICE00" + path.read_bytes()[len(_MAGIC):])
+    fresh = PriceCache(tmp_path)
+    assert fresh.get(t, r) is None
+    assert fresh.stats()["dropped"] == 1
+
+
+def test_truncated_trailing_record_dropped(tmp_path):
+    cache = PriceCache(tmp_path)
+    t, r = digest(b"t"), digest(b"r")
+    cache.put(t, r, 2.0)
+    path = _table_file(cache)
+    path.write_bytes(path.read_bytes()[:-5])     # tear mid-record
+    fresh = PriceCache(tmp_path)
+    assert fresh.get(t, r) is None
+    assert fresh.stats()["dropped"] == 1
+
+
+# ---------------------------------------------------- collectives registry
+def test_clear_caches_drops_memory_not_disk(tmp_path):
+    cache = PriceCache(tmp_path)
+    t, r = digest(b"t"), digest(b"r")
+    cache.put(t, r, 4.0)
+    clear_caches()
+    assert cache.stats()["tables"] == 0          # in-memory mirror gone
+    assert cache.get(t, r) == 4.0                # disk reload serves it
+    stats = cache_stats()["price_cache"]
+    assert stats["hits"] >= 1
+
+
+# ------------------------------------------------------------- tuner level
+@pytest.mark.parametrize("engine", ["batched", "batched-jax"])
+def test_warm_tune_hits_cache_and_reproduces_report(tmp_path, engine):
+    if engine == "batched-jax":
+        pytest.importorskip("jax")
+    app = apps.get("cannon")
+    timed_cold = time_tuned_app(app, engine=engine,
+                                cache=PriceCache(tmp_path))
+    cold = tune_app(timed_cold)
+    warm_cache = PriceCache(tmp_path)            # fresh instance = new run
+    timed_warm = time_tuned_app(app, engine=engine, cache=warm_cache)
+    warm = tune_app(timed_warm)
+    assert warm_cache.stats()["hits"] > 0
+    assert warm_cache.stats()["writes"] == 0     # everything was cached
+    assert warm.best.candidate.describe() == cold.best.candidate.describe()
+    assert [s.placed_cost for s in warm.leaderboard] \
+        == [s.placed_cost for s in cold.leaderboard]
+
+
+def test_value_tags_isolate_engines(tmp_path):
+    """NumPy and JAX prices agree only to tolerance, so each engine
+    family owns its own tables — a warm NumPy cache must not feed a JAX
+    tune."""
+    pytest.importorskip("jax")
+    app = apps.get("summa")
+    cache = PriceCache(tmp_path)
+    tune_app(time_tuned_app(app, engine="batched", cache=cache))
+    before = cache.stats()["writes"]
+    assert before > 0
+    tune_app(time_tuned_app(app, engine="batched-jax", cache=cache))
+    assert cache.stats()["writes"] > before      # jax re-priced its own
+
+
+def test_cost_model_cost_short_circuits(tmp_path):
+    """Phase 1's default-placement score caches too (the warm-re-tune
+    speedup needs Phase 1 to skip schedule builds as well)."""
+    app = apps.get("summa")
+    n = app.default_procs
+    cache = PriceCache(tmp_path)
+    space = time_tuned_app(app, cache=cache).search_space
+    model = space.cost_model(n, {})
+    grid = app.tile_grid(n)
+    first = model.cost(grid)
+    hits0 = cache.stats()["hits"]
+    assert model.cost(grid) == first
+    assert cache.stats()["hits"] == hits0 + 1
+    assert np.isfinite(first)
