@@ -35,6 +35,7 @@ from benchmarks import (
     mapping_eval,
     perf_iterations,
     roofline_report,
+    serve_bench,
     sim_eval,
 )
 
@@ -50,6 +51,9 @@ SECTIONS = {
                      mapping_eval.run),
     "sim_eval": ("Simulator: time-domain tuning, engine parity/speedup, "
                  "1024-proc scale (+ BENCH_sim.json)", sim_eval.run),
+    "serve_bench": ("Tuning service: cold vs warm trace replay + "
+                    "warm-started search (+ BENCH_serve.json)",
+                    serve_bench.run),
     "roofline": ("Roofline table (from dry-run artifacts)",
                  roofline_report.run),
     "perf_iterations": ("§Perf hillclimb summary (from recorded artifacts)",
@@ -107,6 +111,14 @@ def _trajectory(sections: dict) -> dict:
                 "jax_parity_max_rel": jp.get("max_rel_diff"),
                 "engine_parity_max_abs_s": par.get("max_abs_diff_s"),
                 "mean_rank_agreement": res.get("mean_rank_agreement"),
+            })
+        elif key == "serve_bench" and isinstance(res, dict):
+            rp = res.get("replay") or {}
+            row.update({
+                "warm_replay_speedup": rp.get("speedup"),
+                "cold_p99_s": rp.get("cold_p99_s"),
+                "warm_p99_s": rp.get("warm_p99_s"),
+                "warm_start_ok": (res.get("warm_start") or {}).get("ok"),
             })
         elif key == "mapping_eval" and isinstance(res, dict):
             row["speedup"] = res.get("speedup")

@@ -1,0 +1,230 @@
+"""Tuning-service load benchmark -> ``BENCH_serve.json``.
+
+Two lanes, both gated (the committed floors fail CI on regression):
+
+**replay** — a seeded request trace (mixed apps and scales, skewed
+toward repeats, the regime a mapping service actually sees) replayed
+through a :class:`~repro.serving.mapsvc.MappingService` twice over one
+persistent ``--cache-dir``:
+
+* *cold*: fresh directory — every unique question searches, repeats
+  within the run coalesce or hit the warming plan cache;
+* *warm*: a brand-new service instance over the same directory with
+  every in-process cache cleared first — only the on-disk plan store
+  carries over, and it must answer **every** request (hits ==
+  requests, searches == 0, zero recomputation) with plans identical to
+  the cold run's, at >= ``SERVE_WARM_FLOOR`` x the cold throughput.
+
+**warm_start** — the search-quality side of warm starting, per registry
+app: seeding ``tune_app`` with the cold winner must reproduce the cold
+leaderboard bit-for-bit (the seed is already shortlisted -> superset
+degenerates to equality), and cross-scale seeds (paper-scale winner
+refit to 4x scale) must never rank worse than the cold search at that
+scale.
+
+Both lanes run on the NumPy pricing engine: determinism is the point
+here, engine speed has its own lanes in ``sim_eval``.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py
+    PYTHONPATH=src python benchmarks/serve_bench.py --requests 64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro import apps                                    # noqa: E402
+from repro.search.tuner import refit_candidate, tune_app  # noqa: E402
+from repro.serving.mapsvc import (                        # noqa: E402
+    MappingService,
+    Rejected,
+    replay,
+)
+from repro.serving.serve import demo_trace                # noqa: E402
+from repro.sim.collectives import clear_caches            # noqa: E402
+from repro.sim.cost import time_tuned_app                 # noqa: E402
+
+#: Acceptance: the warm (all-plan-cache-hits) replay must beat the cold
+#: replay's throughput by at least this factor. Measured ~40-200x on CI
+#: hardware; 3x leaves room for tiny traces and noisy runners.
+SERVE_WARM_FLOOR = 3.0
+
+DEFAULT_REQUESTS = 32
+WARM_START_SCALE = 4     # cross-scale lane: seed paper scale -> 4x scale
+
+
+def _plan_essence(res) -> dict | None:
+    """The provenance-independent content of one resolved request."""
+    if isinstance(res, Rejected):
+        return None
+    return {"app": res.app, "procs": res.procs,
+            "candidate": res.candidate, "placed_cost": res.placed_cost,
+            "source": res.source, "leaderboard": res.leaderboard}
+
+
+def replay_bench(report=print, n_requests: int = DEFAULT_REQUESTS,
+                 seed: int = 0) -> dict:
+    """Cold vs warm trace replay through one plan-cache directory."""
+    trace = demo_trace(n_requests, seed)
+    root = Path(tempfile.mkdtemp(prefix="serve-bench-"))
+    try:
+        clear_caches()
+        t0 = time.perf_counter()
+        with MappingService(root, workers=0) as svc:
+            cold_results = replay(svc, trace)
+            cold_stats = svc.stats.summary()
+        t_cold = time.perf_counter() - t0
+
+        clear_caches()   # drop every in-process cache; disk carries over
+        t0 = time.perf_counter()
+        with MappingService(root, workers=0) as svc:
+            warm_results = replay(svc, trace)
+            warm_stats = svc.stats.summary()
+        t_warm = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    plans_match = all(
+        _plan_essence(c) == _plan_essence(w)
+        for c, w in zip(cold_results, warm_results)
+    )
+    speedup = t_cold / t_warm if t_warm > 0 else float("inf")
+    ok = (speedup >= SERVE_WARM_FLOOR
+          and warm_stats["cache_hits"] == n_requests
+          and warm_stats["searches"] == 0
+          and cold_stats["completed"] == n_requests
+          and warm_stats["completed"] == n_requests
+          and plans_match)
+    report(f"\nservice replay ({n_requests} requests): cold {t_cold:.2f}s "
+           f"({cold_stats['searches']} searches, "
+           f"{cold_stats['cache_hits']} hits, "
+           f"{cold_stats['coalesced']} coalesced)  warm {t_warm:.3f}s "
+           f"({warm_stats['cache_hits']} hits, "
+           f"{warm_stats['searches']} searches)  speedup {speedup:.1f}x "
+           f"(floor {SERVE_WARM_FLOOR:.0f}x)  plans match: {plans_match} "
+           f"({'OK' if ok else 'FAIL'})")
+    return {
+        "requests": n_requests,
+        "cold_s": t_cold,
+        "warm_s": t_warm,
+        "speedup": speedup,
+        "speedup_floor": SERVE_WARM_FLOOR,
+        "cold": cold_stats,
+        "warm": warm_stats,
+        "cold_p50_s": cold_stats["latency"]["p50_s"],
+        "cold_p99_s": cold_stats["latency"]["p99_s"],
+        "warm_p50_s": warm_stats["latency"]["p50_s"],
+        "warm_p99_s": warm_stats["latency"]["p99_s"],
+        "plans_match": plans_match,
+        "ok": ok,
+    }
+
+
+def warm_start_bench(report=print) -> dict:
+    """Warm-started search vs cold search across the registry."""
+    rows = []
+    for app in apps.iter_apps():
+        if app.search_space is None or app.collective is None:
+            continue
+        tuned = time_tuned_app(app)
+        cold = tune_app(tuned)
+        # Lane 1: seed with the cold winner — already shortlisted, so
+        # the warm report must be bit-identical (warm_seeds == 0).
+        warm = tune_app(tuned, warm_start=[cold.best.candidate])
+        identical = (
+            warm.warm_seeds == 0
+            and [s.placed_cost for s in warm.leaderboard]
+            == [s.placed_cost for s in cold.leaderboard]
+            and warm.best.candidate == cold.best.candidate
+        )
+        # Lane 2: cross-scale — paper winner refit to 4x procs seeds
+        # that scale's search; a superset beam can never rank worse.
+        procs4 = cold.procs * WARM_START_SCALE
+        not_worse = True
+        seeded = 0
+        if tuned.search_space.grids(procs4):
+            cold4 = tune_app(tuned, procs4)
+            seed = refit_candidate(tuned.search_space, cold.best.candidate,
+                                   procs4)
+            warm4 = tune_app(tuned, procs4,
+                             warm_start=[seed] if seed else [])
+            seeded = warm4.warm_seeds
+            not_worse = warm4.best.rank_cost <= cold4.best.rank_cost
+        rows.append({"app": app.name, "procs": cold.procs,
+                     "identical_when_seed_known": identical,
+                     "cross_scale_procs": procs4,
+                     "cross_scale_seeds": seeded,
+                     "cross_scale_not_worse": not_worse})
+    ok = all(r["identical_when_seed_known"] and r["cross_scale_not_worse"]
+             for r in rows)
+    report(f"\nwarm-start search ({len(rows)} apps): self-seed bit-equal: "
+           f"{all(r['identical_when_seed_known'] for r in rows)}, "
+           f"cross-scale never worse: "
+           f"{all(r['cross_scale_not_worse'] for r in rows)} "
+           f"({'OK' if ok else 'FAIL'})")
+    return {"apps": rows, "ok": ok}
+
+
+def run(report=print, n_requests: int = DEFAULT_REQUESTS,
+        json_path: str | None = "BENCH_serve.json") -> dict:
+    result = {
+        "replay": replay_bench(report, n_requests),
+        "warm_start": warm_start_bench(report),
+    }
+    result["ok"] = result["replay"]["ok"] and result["warm_start"]["ok"]
+    if json_path:
+        Path(json_path).write_text(json.dumps(result, indent=2) + "\n")
+        report(f"wrote {json_path}")
+    return result
+
+
+def check(result: dict) -> list[str]:
+    """Acceptance gates over a run's (or a loaded BENCH_serve.json's)
+    result — shared by main() and the CI perf-regression lane."""
+    errors = []
+    rp = result.get("replay")
+    if rp is not None:
+        if rp["speedup"] < rp["speedup_floor"]:
+            errors.append(
+                f"warm service replay speedup {rp['speedup']:.1f}x fell "
+                f"below the committed {rp['speedup_floor']:.0f}x floor")
+        if rp["warm"]["cache_hits"] != rp["requests"] \
+                or rp["warm"]["searches"] != 0:
+            errors.append(
+                "the warm replay recomputed instead of serving every "
+                "request from the persistent plan cache")
+        if not rp["plans_match"]:
+            errors.append("warm-replay plans diverged from the cold run's")
+    ws = result.get("warm_start")
+    if ws is not None and not ws["ok"]:
+        for r in ws["apps"]:
+            if not r["identical_when_seed_known"]:
+                errors.append(f"{r['app']}: seeding the known winner "
+                              f"changed the report (must be bit-identical)")
+            if not r["cross_scale_not_worse"]:
+                errors.append(f"{r['app']}: a cross-scale warm start "
+                              f"ranked worse than the cold search")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--requests", type=int, default=DEFAULT_REQUESTS)
+    ap.add_argument("--json", default="BENCH_serve.json", metavar="PATH")
+    args = ap.parse_args(argv)
+    result = run(n_requests=args.requests, json_path=args.json)
+    errors = check(result)
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

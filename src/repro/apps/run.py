@@ -115,7 +115,8 @@ def _finish(procs: int | None, json_rows: list, failures: list[str],
 def tune(selection, procs: int | None, report=print,
          json_path: str | None = None, time_domain: bool = False,
          backend: str = "numpy", pipeline: bool | None = None,
-         cache_dir: str | None = None) -> int:
+         cache_dir: str | None = None,
+         warm_start_from: str | None = None) -> int:
     """Run the autotuner over the selected apps; nonzero on any failure.
 
     ``time_domain`` swaps each app's volume objective for the batched
@@ -130,6 +131,10 @@ def tune(selection, procs: int | None, report=print,
     auto-selects it for the JAX engine), and ``cache_dir`` points the
     persistent price cache + JAX compilation cache at a directory so
     repeat tunes skip pricing and XLA compiles across processes.
+    ``warm_start_from`` points at a plan-cache directory (the tuning
+    service's ``--cache-dir``, same on-disk format): cached winners near
+    each requested scale seed the beam, and every winner tuned here is
+    stored back for the service (and future batch runs) to reuse.
     """
     import time
 
@@ -146,6 +151,15 @@ def tune(selection, procs: int | None, report=print,
 
         price_cache = PriceCache(os.path.join(cache_dir, "prices"))
         report(f"price cache: {price_cache.root}")
+    plan_cache = None
+    if warm_start_from is not None:
+        if not time_domain:
+            raise ValueError("warm_start_from requires time_domain=True "
+                             "(plan payloads carry placed seconds)")
+        from repro.serving.plan_cache import PlanCache
+
+        plan_cache = PlanCache(os.path.join(warm_start_from, "plans"))
+        report(f"plan cache: {plan_cache.root}")
     if time_domain and backend == "jax":
         from repro.sim.jax_backend import enable_compilation_cache, \
             platform_info
@@ -196,7 +210,22 @@ def tune(selection, procs: int | None, report=print,
 
             engine = "batched-jax" if backend == "jax" else "batched"
             app = time_tuned_app(app, engine=engine, cache=price_cache)
-        rep = tune_app(app, procs, pipeline=pipeline)
+        warm_seeds = ()
+        plan_coords = None
+        if plan_cache is not None:
+            from repro.serving.mapsvc import plan_key_for, warm_seeds_for
+
+            n_res, key, tag = plan_key_for(app, procs, engine=engine)
+            plan_coords = (key, tag)
+            warm_seeds = warm_seeds_for(plan_cache, app.name, n_res,
+                                        app.search_space)
+        rep = tune_app(app, procs, pipeline=pipeline, warm_start=warm_seeds)
+        if plan_coords is not None:
+            from repro.serving.mapsvc import plan_from_report
+
+            key, tag = plan_coords
+            plan_cache.put(key, plan_from_report(
+                rep, value_tag_=tag, provenance="cold").payload())
         tuned += 1
         for line in report_lines(rep):
             report(line)
@@ -341,6 +370,11 @@ def main(argv=None) -> int:
                          "— priced placements (DIR/prices) and, with "
                          "--backend jax, compiled XLA programs (DIR/xla) "
                          "are reused across processes")
+    ap.add_argument("--warm-start-from", default=None, metavar="DIR",
+                    help="with --tune --time: seed the beam from the plan "
+                         "cache under DIR/plans (the tuning service's "
+                         "--cache-dir; winners tuned here are stored back "
+                         "— one shared on-disk format)")
     ap.add_argument("--simulate", action="store_true",
                     help="run each app's mapped step through the "
                          "discrete-event simulator and print the timeline")
@@ -364,6 +398,8 @@ def main(argv=None) -> int:
         ap.error("--pipeline/--no-pipeline requires --tune --time")
     if args.cache_dir is not None and not args.time:
         ap.error("--cache-dir requires --tune --time")
+    if args.warm_start_from is not None and not args.time:
+        ap.error("--warm-start-from requires --tune --time")
     if args.backend == "jax":
         from repro.sim.jax_backend import have_jax
 
@@ -409,7 +445,8 @@ def main(argv=None) -> int:
     if args.tune:
         return tune(selection, args.procs, json_path=args.json,
                     time_domain=args.time, backend=args.backend,
-                    pipeline=args.pipeline, cache_dir=args.cache_dir)
+                    pipeline=args.pipeline, cache_dir=args.cache_dir,
+                    warm_start_from=args.warm_start_from)
     if args.simulate:
         return simulate(selection, args.procs, json_path=args.json)
 

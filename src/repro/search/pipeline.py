@@ -36,6 +36,7 @@ from typing import Any, Iterable, Iterator, Sequence
 
 import numpy as np
 
+from repro.sim.batch import price_stacks
 from repro.sim.price_cache import PriceCache
 
 #: Producer lead bound (groups buffered between the threads).
@@ -117,6 +118,36 @@ def price_job(job: PriceJob, *, fold: bool = True,
     else:
         values = np.empty(0, dtype=np.float64)
     return _merge(job, times, miss_idx, values)
+
+
+def price_jobs(jobs: Sequence[PriceJob], *, fold: bool = True,
+               incremental: bool = True) -> list[np.ndarray]:
+    """Price many groups in as few shared congestion passes as possible
+    — the tuner's barrier Phase 3, and the tuning service's
+    cross-request batching primitive (jobs from *different* requests
+    pack into the same :func:`~repro.sim.batch.price_stacks` sweeps, so
+    compatible queued requests share device passes).
+
+    Persistent-cache hits are excluded up front and fresh prices are
+    written back per group. Each job's ``entries`` get their
+    ``placed_cost`` attribute written; the merged per-group times are
+    also returned in job order.
+    """
+    if not jobs:
+        return []
+    splits = [job.split_cached() for job in jobs]
+    priced = price_stacks(
+        [(job.engine, job.stack[np.asarray(miss, dtype=np.intp)])
+         for job, (_, miss) in zip(jobs, splits)],
+        fold=fold, incremental=incremental,
+    )
+    out = []
+    for job, (times, miss), values in zip(jobs, splits, priced):
+        times = _merge(job, times, miss, np.asarray(values))
+        for entry, t in zip(job.entries, times):
+            entry.placed_cost = float(t)
+        out.append(times)
+    return out
 
 
 def _produce(jobs: Iterable[PriceJob], out: "queue.Queue",
@@ -209,5 +240,6 @@ __all__ = [
     "DEFAULT_QUEUE_SIZE",
     "PriceJob",
     "price_job",
+    "price_jobs",
     "stream_priced",
 ]

@@ -41,10 +41,11 @@ import numpy as np
 
 from repro.core import dsl
 from repro.core.machine import GPU, Machine
-from repro.sim.batch import canonical_assignment, price_stacks
+from repro.sim.batch import canonical_assignment
 from repro.sim.price_cache import digest
-from repro.search.pipeline import PriceJob, stream_priced
+from repro.search.pipeline import PriceJob, price_jobs, stream_priced
 from repro.search.space import (
+    BLOCK_CYCLIC,
     Candidate,
     CandidateProgram,
     SearchSpace,
@@ -115,6 +116,10 @@ class TuningReport:
     #: pricing, producer/consumer or barrier) — the region ``pipeline``
     #: reshapes, and the one the pipeline benchmark compares.
     phase3_s: float = 0.0
+    #: Warm-start seeds that actually joined the beam (0 for a cold
+    #: search, or when every seed was already shortlisted — in which
+    #: case the report is bit-identical to the cold one).
+    warm_seeds: int = 0
 
     @property
     def oracle_ok(self) -> bool:
@@ -142,6 +147,7 @@ class TuningReport:
             "best_ir": self.best_ir,
             "elapsed_s": self.elapsed_s,
             "phase3_s": self.phase3_s,
+            "warm_seeds": self.warm_seeds,
             "note": self.note,
         }
 
@@ -201,59 +207,102 @@ def nearest_feasible_procs(space: SearchSpace, n: int, *, count: int = 4,
     return found[:count]
 
 
-def tune_app(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
-             leaderboard: int = DEFAULT_LEADERBOARD,
-             pipeline: bool | None = None) -> TuningReport:
-    """Search one application's mapper space; returns the full report.
+def _admit_seed(space: SearchSpace, seed, n: int, grid_set: set,
+                combos: set) -> tuple | None:
+    """Validate one warm-start seed against the live search space.
 
-    ``pipeline`` controls Phase 3's execution shape: ``True`` streams
-    expansion and pricing through ``repro.search.pipeline`` (host
-    expands group k+1 while the device prices group k), ``False`` keeps
-    the strict barrier (expand everything, then one packed pricing
-    sweep), ``None`` (default) picks the pipeline exactly when the cost
-    model prices on the asynchronous-dispatch JAX engine — the host
-    NumPy engine gains more from the barrier path's cross-group packing
-    than from overlap. Both shapes produce bit-identical reports.
+    Returns the Phase-1 ``(volume, grid, options)`` entry the seed
+    contributes, or ``None`` when the seed is stale or incompatible
+    (wrong grid rank, infeasible grid, unknown option point, cost model
+    rejection) — skipped, never fatal."""
+    try:
+        grid = tuple(int(g) for g in seed.grid)
+        options = tuple((str(k), str(v)) for k, v in seed.options)
+    except (AttributeError, TypeError, ValueError):
+        return None
+    if len(grid) != space.rank or grid not in grid_set:
+        return None
+    if options not in combos:
+        return None
+    try:
+        volume = float(space.cost_model(n, dict(options)).cost(grid))
+    except (ValueError, ArithmeticError):
+        return None
+    return (volume, grid, options)
+
+
+def refit_candidate(space: SearchSpace, cand: Candidate,
+                    procs: int) -> Candidate | None:
+    """Re-instantiate a candidate from a *different* scale on the
+    feasible grid of ``procs`` nearest in shape to its own (log-ratio
+    distance per axis, ties lexicographic) — how the tuning service
+    turns a cached winner from a nearby processor count into a
+    ``warm_start`` seed. Distribution/order carry over when the rank
+    matches; returns ``None`` when nothing feasible fits."""
+    grids = space.grids(procs)
+    if not grids:
+        return None
+    try:
+        seed_grid = tuple(int(g) for g in cand.grid)
+    except (TypeError, ValueError):
+        return None
+    if len(seed_grid) != space.rank or any(g < 1 for g in seed_grid):
+        return None
+    if seed_grid in grids:
+        grid = seed_grid
+    else:
+        import math
+
+        def dist(g: tuple[int, ...]) -> float:
+            return sum((math.log(a) - math.log(b)) ** 2
+                       for a, b in zip(g, seed_grid))
+
+        grid = min(grids, key=lambda g: (dist(g), g))
+    k = len(grid)
+    d = tuple(cand.dist) if len(cand.dist) == k else (BLOCK_CYCLIC,) * k
+    order = (tuple(cand.order) if sorted(cand.order) == list(range(k))
+             else tuple(range(k)))
+    return Candidate(grid=grid, dist=d, order=order, options=cand.options)
+
+
+@dataclasses.dataclass
+class PendingTune:
+    """A tune split at the Phase-3 pricing boundary.
+
+    ``prepare_tune`` runs Phases 1–2 (analytic scoring, beam pruning,
+    warm-seed admission) and returns this handle; :meth:`jobs` is the
+    Phase-3 expansion generator (consume exactly once — each yielded
+    :class:`PriceJob` needs its ``placed_cost`` written, via
+    ``price_jobs``/``stream_priced``); :meth:`finish` runs Phase 4 and
+    builds the :class:`TuningReport`. ``tune_app`` composes the three
+    inline; the tuning service (``repro.serving.mapsvc``) holds several
+    PendingTunes open at once so their jobs price in shared
+    cross-request ``price_stacks`` passes.
     """
-    space: SearchSpace | None = app.search_space
-    if space is None:
-        raise ValueError(f"application {app.name!r} declares no search space")
-    t0 = time.perf_counter()
-    n, note = _feasible_procs(space, app, procs)
-    machine_shape = tuple(int(s) for s in app.machine_shape(n))
 
-    # Phase 1: analytic scoring of every (grid, options) point.
-    grids = space.grids(n)
-    scored: list[tuple[float, tuple[int, ...], tuple[tuple[str, str], ...]]] = []
-    for options in space.option_combos():
-        model = space.cost_model(n, dict(options))
-        for grid in grids:
-            try:
-                volume = float(model.cost(grid))
-            except ValueError:
-                continue
-            scored.append((volume, grid, options))
-    if not scored:
-        near = nearest_feasible_procs(space, n, max_delta=256)
-        hint = f"; nearest feasible proc counts: {near}" if near else ""
-        raise ValueError(
-            f"no feasible candidate for {app.name} at {n} procs{hint}")
-    scored.sort()
+    app: "object"
+    space: SearchSpace
+    n: int
+    machine_shape: tuple[int, ...]
+    scored: list
+    shortlist: list
+    pruned: int
+    note: str
+    leaderboard_n: int
+    warm_seeds: int
+    t0: float
+    evaluated: list = dataclasses.field(default_factory=list)
+    seen: dict = dataclasses.field(default_factory=dict)
+    phase3_s: float = 0.0
 
-    # Phase 2: beam prune — a grid whose volume is dominated can never win,
-    # since distribution/order variants only change locality, not volume.
-    shortlist = scored[:max(beam, 1)]
-    pruned = len(scored) - len(shortlist)
+    @property
+    def prices_async(self) -> bool:
+        """True when the cost model prices on the asynchronous-dispatch
+        JAX engine — the case where streaming Phase 3 pays."""
+        probe = self.space.cost_model(self.n, dict(self.shortlist[0][2]))
+        return getattr(probe, "engine", None) == "batched-jax"
 
-    # Phase 3: variant expansion + batch pricing — as a producer/consumer
-    # pipeline (expansion of group k+1 overlaps device pricing of group
-    # k) or as the legacy barrier, per ``pipeline``; identical numbers
-    # either way.
-    t3 = time.perf_counter()
-    evaluated: list[ScoredCandidate] = []
-    seen: dict[tuple, ScoredCandidate] = {}
-
-    def expand_jobs():
+    def jobs(self):
         """Walk the shortlist, expand + dedupe variants, and yield one
         :class:`PriceJob` per beam entry whose placements a batch engine
         will price. Runs on the pipeline's producer thread (all mutation
@@ -261,7 +310,9 @@ def tune_app(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
         consumer only writes ``placed_cost``). Models without a batch
         pricer fall back inline: the exact event engine prices here,
         volume models emit nothing and rank by locality alone."""
-        for volume, grid, options in shortlist:
+        space, n, machine_shape = self.space, self.n, self.machine_shape
+        seen, evaluated, app = self.seen, self.evaluated, self.app
+        for volume, grid, options in self.shortlist:
             survivors: list[tuple[ScoredCandidate, np.ndarray, bytes]] = []
             for cand in space.variants(grid, options, machine_shape):
                 program = build_program(machine_shape, cand,
@@ -326,97 +377,199 @@ def tune_app(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
                                     model.price_assignments(grid, stack)):
                     entry.placed_cost = float(t)
 
+    def finish(self) -> TuningReport:
+        """Phase 4: rank the evaluated variants, render the winner back
+        to Mapple DSL source, verify the parse round-trip, score the
+        untuned default and the legacy oracle, and assemble the report.
+        Call only after every job from :meth:`jobs` has had its
+        ``placed_cost`` written."""
+        app, space = self.app, self.space
+        n, machine_shape = self.n, self.machine_shape
+        ranked = sorted(
+            (s for s in self.evaluated if s.bijective),
+            key=lambda s: (s.rank_cost, s.cross_node,
+                           s.candidate.describe()),
+        )
+        if not ranked:
+            raise ValueError(
+                f"no bijective candidate survived for {app.name} at {n} procs"
+            )
+        best = ranked[0]
+
+        best_program = build_program(machine_shape, best.candidate,
+                                     f"{app.name}_tuned")
+        directives = None
+        if space.directives is not None:
+            directives = space.directives(app.name, best.candidate.opts)
+        source = render_source(app.name, best_program, directives)
+        parsed = dsl.parse(
+            source,
+            machine_factory=lambda *a, **k: Machine(GPU, shape=machine_shape),
+        )
+        parsed_mapper = parsed.mappers[parsed.index_task_maps[app.name]]
+        verified = bool(np.array_equal(
+            parsed_mapper.assignment_grid(best.candidate.grid,
+                                          use_cache=False),
+            best_program.mapper.assignment_grid(best.candidate.grid),
+        ))
+
+        default_scored: ScoredCandidate | None = None
+        default_cand = space.default_candidate(n)
+        if default_cand is not None:
+            model = space.cost_model(n, default_cand.opts)
+            try:
+                default_scored = ScoredCandidate(
+                    candidate=default_cand,
+                    volume=float(model.cost(default_cand.grid)),
+                )
+            except ValueError:
+                default_scored = None
+
+        oracle: tuple[float, float] | None = None
+        if app.tuning is not None:
+            try:
+                oracle = tuple(app.tuning(n))  # type: ignore[assignment]
+            except ValueError:
+                oracle = None
+
+        return TuningReport(
+            app=app.name,
+            procs=n,
+            machine_shape=machine_shape,
+            candidates_considered=len(self.scored),
+            variants_evaluated=len(self.evaluated),
+            pruned=self.pruned,
+            best=best,
+            best_program=best_program,
+            best_source=source,
+            best_ir=best_program.space.describe(),
+            verified=verified,
+            default=default_scored,
+            oracle=oracle,
+            leaderboard=ranked[:self.leaderboard_n],
+            elapsed_s=time.perf_counter() - self.t0,
+            phase3_s=self.phase3_s,
+            note=self.note,
+            warm_seeds=self.warm_seeds,
+        )
+
+
+def prepare_tune(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
+                 leaderboard: int = DEFAULT_LEADERBOARD,
+                 warm_start: Iterable[Candidate] = ()) -> PendingTune:
+    """Phases 1–2 of :func:`tune_app`, returned as a :class:`PendingTune`.
+
+    ``warm_start`` seeds (cached winners from a nearby scale, refit via
+    :func:`refit_candidate`) join the beam *in addition to* the
+    lowest-volume shortlist — a superset of the cold search space, so a
+    warm search can never rank worse than the cold one, and when every
+    seed is already shortlisted the report is bit-identical to cold
+    (``warm_seeds == 0``). Stale or incompatible seeds are skipped.
+    """
+    space: SearchSpace | None = app.search_space
+    if space is None:
+        raise ValueError(f"application {app.name!r} declares no search space")
+    t0 = time.perf_counter()
+    n, note = _feasible_procs(space, app, procs)
+    machine_shape = tuple(int(s) for s in app.machine_shape(n))
+
+    # Phase 1: analytic scoring of every (grid, options) point.
+    grids = space.grids(n)
+    scored: list[tuple[float, tuple[int, ...], tuple[tuple[str, str], ...]]] = []
+    for options in space.option_combos():
+        model = space.cost_model(n, dict(options))
+        for grid in grids:
+            try:
+                volume = float(model.cost(grid))
+            except ValueError:
+                continue
+            scored.append((volume, grid, options))
+    if not scored:
+        near = nearest_feasible_procs(space, n, max_delta=256)
+        hint = f"; nearest feasible proc counts: {near}" if near else ""
+        raise ValueError(
+            f"no feasible candidate for {app.name} at {n} procs{hint}")
+    scored.sort()
+
+    # Phase 2: beam prune — a grid whose volume is dominated can never win,
+    # since distribution/order variants only change locality, not volume.
+    shortlist = list(scored[:max(beam, 1)])
+    pruned = len(scored) - len(shortlist)
+
+    # Warm-start admission: each seed that survives validation appends
+    # its (grid, options) group to the shortlist unless Phase 2 kept it
+    # already — strictly widening the beam, never replacing it.
+    warm_admitted = 0
+    seeds = list(warm_start)
+    if seeds:
+        combos = set(space.option_combos())
+        grid_set = set(grids)
+        have = {(g, o) for _, g, o in shortlist}
+        for seed in seeds:
+            entry = _admit_seed(space, seed, n, grid_set, combos)
+            if entry is None or (entry[1], entry[2]) in have:
+                continue
+            have.add((entry[1], entry[2]))
+            shortlist.append(entry)
+            warm_admitted += 1
+        if warm_admitted:
+            extra = f"warm-start: {warm_admitted}/{len(seeds)} seeds joined the beam"
+            note = f"{note}; {extra}" if note else extra
+
+    return PendingTune(
+        app=app,
+        space=space,
+        n=n,
+        machine_shape=machine_shape,
+        scored=scored,
+        shortlist=shortlist,
+        pruned=pruned,
+        note=note,
+        leaderboard_n=leaderboard,
+        warm_seeds=warm_admitted,
+        t0=t0,
+    )
+
+
+def tune_app(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
+             leaderboard: int = DEFAULT_LEADERBOARD,
+             pipeline: bool | None = None,
+             warm_start: Iterable[Candidate] = ()) -> TuningReport:
+    """Search one application's mapper space; returns the full report.
+
+    ``pipeline`` controls Phase 3's execution shape: ``True`` streams
+    expansion and pricing through ``repro.search.pipeline`` (host
+    expands group k+1 while the device prices group k), ``False`` keeps
+    the strict barrier (expand everything, then one packed pricing
+    sweep), ``None`` (default) picks the pipeline exactly when the cost
+    model prices on the asynchronous-dispatch JAX engine — the host
+    NumPy engine gains more from the barrier path's cross-group packing
+    than from overlap. Both shapes produce bit-identical reports.
+
+    ``warm_start`` seeds (e.g. cached winners from a nearby scale) widen
+    the beam per :func:`prepare_tune` — results are never worse than the
+    cold search, and bit-identical to it when no seed is novel.
+    """
+    pending = prepare_tune(app, procs, beam=beam, leaderboard=leaderboard,
+                           warm_start=warm_start)
+
+    # Phase 3: variant expansion + batch pricing — as a producer/consumer
+    # pipeline (expansion of group k+1 overlaps device pricing of group
+    # k) or as the legacy barrier, per ``pipeline``; identical numbers
+    # either way.
     if pipeline is None:
-        probe = space.cost_model(n, dict(shortlist[0][2]))
-        pipeline = getattr(probe, "engine", None) == "batched-jax"
+        pipeline = pending.prices_async
+    t3 = time.perf_counter()
     if pipeline:
-        for job, times in stream_priced(expand_jobs()):
+        for job, times in stream_priced(pending.jobs()):
             for entry, t in zip(job.entries, times):
                 entry.placed_cost = float(t)
     else:
-        beam_groups = list(expand_jobs())
-        if beam_groups:
-            # All shortlisted grids x options in one candidates x phases
-            # x ports pricing sweep, cache hits excluded up front.
-            splits = [job.split_cached() for job in beam_groups]
-            priced = price_stacks([
-                (job.engine,
-                 job.stack[np.asarray(miss, dtype=np.intp)])
-                for job, (_, miss) in zip(beam_groups, splits)
-            ])
-            for job, (times, miss), values in zip(beam_groups, splits,
-                                                  priced):
-                if miss:
-                    times[np.asarray(miss, dtype=np.intp)] = values
-                    job.store(miss, values)
-                for entry, t in zip(job.entries, times):
-                    entry.placed_cost = float(t)
-    phase3_s = time.perf_counter() - t3
-    ranked = sorted(
-        (s for s in evaluated if s.bijective),
-        key=lambda s: (s.rank_cost, s.cross_node, s.candidate.describe()),
-    )
-    if not ranked:
-        raise ValueError(
-            f"no bijective candidate survived for {app.name} at {n} procs"
-        )
-    best = ranked[0]
-
-    # Phase 4: winner back to DSL source, verified against the IR program.
-    best_program = build_program(machine_shape, best.candidate,
-                                 f"{app.name}_tuned")
-    directives = None
-    if space.directives is not None:
-        directives = space.directives(app.name, best.candidate.opts)
-    source = render_source(app.name, best_program, directives)
-    parsed = dsl.parse(
-        source,
-        machine_factory=lambda *a, **k: Machine(GPU, shape=machine_shape),
-    )
-    parsed_mapper = parsed.mappers[parsed.index_task_maps[app.name]]
-    verified = bool(np.array_equal(
-        parsed_mapper.assignment_grid(best.candidate.grid, use_cache=False),
-        best_program.mapper.assignment_grid(best.candidate.grid),
-    ))
-
-    default_scored: ScoredCandidate | None = None
-    default_cand = space.default_candidate(n)
-    if default_cand is not None:
-        model = space.cost_model(n, default_cand.opts)
-        try:
-            default_scored = ScoredCandidate(
-                candidate=default_cand,
-                volume=float(model.cost(default_cand.grid)),
-            )
-        except ValueError:
-            default_scored = None
-
-    oracle: tuple[float, float] | None = None
-    if app.tuning is not None:
-        try:
-            oracle = tuple(app.tuning(n))  # type: ignore[assignment]
-        except ValueError:
-            oracle = None
-
-    return TuningReport(
-        app=app.name,
-        procs=n,
-        machine_shape=machine_shape,
-        candidates_considered=len(scored),
-        variants_evaluated=len(evaluated),
-        pruned=pruned,
-        best=best,
-        best_program=best_program,
-        best_source=source,
-        best_ir=best_program.space.describe(),
-        verified=verified,
-        default=default_scored,
-        oracle=oracle,
-        leaderboard=ranked[:leaderboard],
-        elapsed_s=time.perf_counter() - t0,
-        phase3_s=phase3_s,
-        note=note,
-    )
+        # All shortlisted grids x options in one candidates x phases
+        # x ports pricing sweep, cache hits excluded up front.
+        price_jobs(list(pending.jobs()))
+    pending.phase3_s = time.perf_counter() - t3
+    return pending.finish()
 
 
 def tune_registry(applications: Iterable, procs: int | None = None,
@@ -477,11 +630,14 @@ def report_lines(report: TuningReport) -> list[str]:
 
 __all__ = [
     "DEFAULT_BEAM",
+    "PendingTune",
     "ScoredCandidate",
     "TuningReport",
     "cross_node_fraction",
     "feasible_procs",
     "nearest_feasible_procs",
+    "prepare_tune",
+    "refit_candidate",
     "report_lines",
     "tune_app",
     "tune_registry",

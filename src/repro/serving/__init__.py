@@ -1,2 +1,37 @@
-"""Serving layer: continuous batching scheduler."""
+"""Serving layer: continuous batching scheduler + the tuning service.
+
+Two servers live here. :class:`ContinuousBatcher` is the inference-side
+slot scheduler (decode lockstep over a fixed cache pool);
+:class:`MappingService` is mapping-as-a-service — a persistent,
+concurrent tuning server with a cross-process plan cache
+(:class:`PlanCache`), warm-started beam search, priority/deadline
+admission and cross-request batched pricing (``python -m
+repro.serving.serve`` is its CLI). Both report latencies through the
+shared :func:`percentile` math in :mod:`repro.serving.stats`.
+"""
+from repro.serving.mapsvc import (
+    MappingPlan,
+    MappingService,
+    Rejected,
+    Ticket,
+    TuneRequest,
+)
+from repro.serving.plan_cache import PlanCache, plan_key
 from repro.serving.scheduler import ContinuousBatcher, Request, ServeStats
+from repro.serving.stats import ServiceStats, latency_summary, percentile
+
+__all__ = [
+    "ContinuousBatcher",
+    "MappingPlan",
+    "MappingService",
+    "PlanCache",
+    "Rejected",
+    "Request",
+    "ServeStats",
+    "ServiceStats",
+    "Ticket",
+    "TuneRequest",
+    "latency_summary",
+    "percentile",
+    "plan_key",
+]

@@ -14,11 +14,12 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serving.stats import percentile
 
 
 @dataclasses.dataclass
@@ -43,13 +44,15 @@ class ServeStats:
     latencies: list = dataclasses.field(default_factory=list)
 
     def summary(self) -> dict:
-        lat = sorted(self.latencies) or [0.0]
+        # Quantiles via the shared nearest-rank helper (repro.serving
+        # .stats.percentile) — exact at tiny N, no off-by-one indexing.
         return {
             "completed": self.completed,
             "steps": self.steps,
             "tokens_out": self.tokens_out,
-            "p50_latency_s": lat[len(lat) // 2],
-            "p95_latency_s": lat[min(int(len(lat) * 0.95), len(lat) - 1)],
+            "p50_latency_s": percentile(self.latencies, 50),
+            "p95_latency_s": percentile(self.latencies, 95),
+            "p99_latency_s": percentile(self.latencies, 99),
         }
 
 

@@ -1,0 +1,397 @@
+"""Tests for the tuning service (repro.serving.mapsvc + plan_cache)."""
+import json
+import subprocess
+import sys
+import threading
+import zlib
+from pathlib import Path
+
+import pytest
+
+from repro.serving.mapsvc import (
+    MappingPlan,
+    MappingService,
+    Rejected,
+    TuneRequest,
+    load_trace,
+    plan_key_for,
+    replay,
+    value_tag,
+)
+from repro.serving.plan_cache import _CRC, _HEAD, _MAGIC, PlanCache, plan_key
+from repro.sim.collectives import cache_stats, clear_caches
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _essence(res):
+    """Provenance/timing-independent plan content for identity checks."""
+    assert isinstance(res, MappingPlan), res
+    return (res.app, res.procs, json.dumps(res.candidate, sort_keys=True),
+            res.placed_cost, res.source,
+            json.dumps(res.leaderboard, sort_keys=True))
+
+
+# --------------------------------------------------------------- plan cache
+def test_plan_cache_round_trip_and_idempotent_put(tmp_path):
+    cache = PlanCache(tmp_path)
+    key = plan_key("cannon", 4, "spec", "numpy-f64", (6, 3, 4))
+    assert cache.get(key) is None
+    payload = {"app": "cannon", "procs": 4, "candidate": {"grid": [2, 2]}}
+    cache.put(key, payload)
+    cache.put(key, payload)           # duplicate: no second record
+    assert cache.get(key) == payload
+    assert cache.stats() == {"hits": 1, "misses": 1, "writes": 1,
+                             "dropped": 0, "plans": 1}
+
+
+def test_plan_cache_memory_only_without_root():
+    cache = PlanCache(None)
+    key = plan_key("a", 1, "s", "numpy-f64")
+    cache.put(key, {"x": 1})
+    assert cache.get(key) == {"x": 1}
+    assert cache.path is None
+    cache.clear()
+    assert cache.get(key) is None     # nothing on disk to reload
+
+
+def test_plan_cache_nearest_ranks_by_log_scale(tmp_path):
+    cache = PlanCache(tmp_path)
+    for procs in (4, 16, 64, 1024):
+        cache.put(plan_key("app", procs, "s", "t"),
+                  {"app": "app", "procs": procs})
+    near = cache.nearest("app", 20, count=2)
+    assert [p["procs"] for p in near] == [16, 64]
+    excl = cache.nearest("app", 16, count=1,
+                         exclude=plan_key("app", 16, "s", "t"))
+    assert excl[0]["procs"] in (4, 64)
+
+
+def test_plan_cache_corrupt_tail_drops_cleanly(tmp_path):
+    cache = PlanCache(tmp_path)
+    keys = [plan_key("app", p, "s", "t") for p in (2, 4, 8)]
+    for k, p in zip(keys, (2, 4, 8)):
+        cache.put(k, {"app": "app", "procs": p})
+    path = cache.path
+    blob = bytearray(path.read_bytes())
+    blob[-2] ^= 0xFF                  # flip a CRC byte of the last record
+    path.write_bytes(bytes(blob))
+
+    fresh = PlanCache(tmp_path)
+    assert fresh.get(keys[0]) is not None
+    assert fresh.get(keys[1]) is not None
+    assert fresh.get(keys[2]) is None            # torn tail dropped
+    assert fresh.stats()["dropped"] == 1
+
+    # The next write heals the file whole: all intact records survive.
+    fresh.put(keys[2], {"app": "app", "procs": 8})
+    healed = PlanCache(tmp_path)
+    assert all(healed.get(k) is not None for k in keys)
+    assert healed.stats()["dropped"] == 0
+
+
+def test_plan_cache_truncated_record_drops(tmp_path):
+    cache = PlanCache(tmp_path)
+    key = plan_key("app", 2, "s", "t")
+    cache.put(key, {"app": "app", "procs": 2})
+    path = cache.path
+    path.write_bytes(path.read_bytes()[:-3])     # torn mid-CRC
+    fresh = PlanCache(tmp_path)
+    assert fresh.get(key) is None
+    assert fresh.stats()["dropped"] == 1
+
+
+def test_plan_cache_foreign_file_treated_as_empty(tmp_path):
+    root = tmp_path / "plans"
+    root.mkdir()
+    (root / "plans.log").write_bytes(b"not a plan store")
+    cache = PlanCache(root)
+    key = plan_key("app", 2, "s", "t")
+    assert cache.get(key) is None
+    cache.put(key, {"app": "app", "procs": 2})   # rewrites the file whole
+    assert PlanCache(root).get(key) is not None
+
+
+def test_plan_cache_record_framing_crc_covers_key_and_payload(tmp_path):
+    cache = PlanCache(tmp_path)
+    key = plan_key("app", 2, "s", "t")
+    cache.put(key, {"z": 1})
+    blob = cache.path.read_bytes()
+    assert blob.startswith(_MAGIC)
+    k, size = _HEAD.unpack_from(blob, len(_MAGIC))
+    raw = blob[len(_MAGIC) + _HEAD.size:len(_MAGIC) + _HEAD.size + size]
+    (crc,) = _CRC.unpack_from(blob, len(_MAGIC) + _HEAD.size + size)
+    assert k == key and json.loads(raw) == {"z": 1}
+    assert crc == zlib.crc32(key + raw)
+
+
+def test_plan_cache_registered_with_collectives(tmp_path):
+    cache = PlanCache(tmp_path)
+    cache.put(plan_key("a", 1, "s", "t"), {"app": "a", "procs": 1})
+    assert cache_stats()["plan_cache"]["plans"] >= 1
+    clear_caches()
+    assert cache.stats()["plans"] == 0
+    # Disk store survives the clear and reloads on next access.
+    assert cache.get(plan_key("a", 1, "s", "t")) is not None
+
+
+# ------------------------------------------------------------ service basics
+def test_exact_repeat_hits_plan_cache(tmp_path):
+    with MappingService(tmp_path, workers=0) as svc:
+        first = svc.map(TuneRequest("cannon"))
+        second = svc.map(TuneRequest("cannon"))
+    assert first.provenance == "cold"
+    assert second.provenance == "cache"
+    assert _essence(first) == _essence(second)
+    assert svc.stats.cache_hits == 1 and svc.stats.searches == 1
+
+
+def test_plan_survives_to_second_service_instance(tmp_path):
+    with MappingService(tmp_path, workers=0) as svc:
+        cold = svc.map(TuneRequest("stencil"))
+    clear_caches()
+    with MappingService(tmp_path, workers=0) as svc2:
+        warm = svc2.map(TuneRequest("stencil"))
+    assert warm.provenance == "cache"
+    assert svc2.stats.searches == 0
+    assert _essence(cold) == _essence(warm)
+
+
+def test_second_process_gets_plan_cache_hits(tmp_path):
+    snippet = f"""
+import sys; sys.path.insert(0, {str(REPO / "src")!r})
+from repro.serving.mapsvc import MappingService, TuneRequest
+with MappingService({str(tmp_path)!r}, workers=0) as svc:
+    plan = svc.map(TuneRequest("cannon", procs=16))
+    print(plan.provenance)
+"""
+    out = subprocess.run([sys.executable, "-c", snippet], check=True,
+                         capture_output=True, text=True)
+    assert out.stdout.strip() == "cold"
+    with MappingService(tmp_path, workers=0) as svc:
+        plan = svc.map(TuneRequest("cannon", procs=16))
+    assert plan.provenance == "cache"
+
+
+def test_plan_payload_round_trips(tmp_path):
+    with MappingService(tmp_path, workers=0) as svc:
+        plan = svc.map(TuneRequest("summa"))
+    back = MappingPlan.from_payload(plan.payload(), provenance="cache")
+    assert _essence(back) == _essence(plan)
+    assert back.verified and back.value_tag == "numpy-f64"
+
+
+def test_coalescing_identical_requests_search_once(tmp_path):
+    svc = MappingService(tmp_path, workers=0, coalesce=8)
+    tickets = [svc.submit(TuneRequest("cannon")) for _ in range(4)]
+    svc.drain()
+    results = [t.result(5.0) for t in tickets]
+    assert all(isinstance(r, MappingPlan) for r in results)
+    assert svc.stats.searches == 1
+    assert svc.stats.coalesced == 3
+    assert len({_essence(r) for r in results}) == 1
+    svc.close()
+
+
+def test_batch_prices_across_requests_in_one_pass(tmp_path):
+    svc = MappingService(tmp_path, workers=0, coalesce=8)
+    for name, procs in (("cannon", None), ("stencil", None), ("summa", 16)):
+        svc.submit(TuneRequest(name, procs))
+    svc.drain()
+    # Three distinct searches, one shared cross-request pricing sweep.
+    assert svc.stats.searches == 3
+    assert svc.stats.shared_pricing_passes == 1
+    svc.close()
+
+
+# ------------------------------------------------------- concurrency == serial
+def test_concurrent_submitters_match_serial_plans(tmp_path):
+    trace = [TuneRequest(a, p) for a, p in
+             (("cannon", None), ("stencil", None), ("cannon", 16),
+              ("summa", None), ("cannon", None), ("stencil", 16))]
+    with MappingService(tmp_path / "serial", workers=0,
+                        warm_start=False) as svc:
+        serial = [svc.map(r) for r in trace]
+
+    clear_caches()
+    with MappingService(tmp_path / "conc", workers=3,
+                        warm_start=False) as svc:
+        tickets = [None] * len(trace)
+
+        def submit(i):
+            tickets[i] = svc.submit(trace[i])
+
+        threads = [threading.Thread(target=submit, args=(i,))
+                   for i in range(len(trace))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        concurrent = [t.result(30.0) for t in tickets]
+
+    assert [_essence(r) for r in serial] == [_essence(r) for r in concurrent]
+
+
+# --------------------------------------------------------------- rejections
+def test_queue_full_returns_typed_rejection(tmp_path):
+    svc = MappingService(tmp_path, workers=0, queue_limit=2)
+    t1 = svc.submit(TuneRequest("cannon"))
+    t2 = svc.submit(TuneRequest("stencil"))
+    t3 = svc.submit(TuneRequest("summa"))
+    assert t3.done
+    shed = t3.result()
+    assert isinstance(shed, Rejected) and shed.reason == "queue-full"
+    svc.drain()
+    assert isinstance(t1.result(), MappingPlan)
+    assert isinstance(t2.result(), MappingPlan)
+    assert svc.stats.rejected == {"queue-full": 1}
+    assert svc.stats.shed == 1
+    svc.close()
+
+
+def test_expired_deadline_sheds_at_dispatch(tmp_path):
+    svc = MappingService(tmp_path, workers=0)
+    ticket = svc.submit(TuneRequest("cannon", deadline_s=-1.0))
+    svc.drain()
+    res = ticket.result()
+    assert isinstance(res, Rejected) and res.reason == "deadline"
+    assert svc.stats.searches == 0
+    svc.close()
+
+
+def test_timeout_budget_rejects_but_still_caches(tmp_path):
+    svc = MappingService(tmp_path, workers=0)
+    res = svc.map(TuneRequest("cannon", timeout_s=0.0))
+    assert isinstance(res, Rejected) and res.reason == "timeout"
+    # The plan was cached regardless: the repeat answers from cache.
+    repeat = svc.map(TuneRequest("cannon"))
+    assert isinstance(repeat, MappingPlan)
+    assert repeat.provenance == "cache"
+    svc.close()
+
+
+def test_unknown_app_returns_error_rejection(tmp_path):
+    svc = MappingService(tmp_path, workers=0)
+    res = svc.map(TuneRequest("nosuchapp"))
+    assert isinstance(res, Rejected) and res.reason == "error"
+    assert "nosuchapp" in res.detail
+    svc.close()
+
+
+def test_submit_after_close_rejects_closed(tmp_path):
+    svc = MappingService(tmp_path, workers=0)
+    svc.close()
+    res = svc.submit(TuneRequest("cannon")).result()
+    assert isinstance(res, Rejected) and res.reason == "closed"
+
+
+def test_priority_orders_dispatch(tmp_path):
+    svc = MappingService(tmp_path, workers=0, coalesce=1)
+    low = svc.submit(TuneRequest("cannon", priority=5))
+    high = svc.submit(TuneRequest("stencil", priority=0))
+    svc.drain()
+    # coalesce=1 -> one batch each; the high-priority request resolved
+    # first even though it was submitted second.
+    assert high.result().elapsed_s < low.result().elapsed_s or (
+        svc.stats.completed == 2)
+    assert isinstance(high.result(), MappingPlan)
+    svc.close()
+
+
+# ------------------------------------------------------------------- stats
+def test_service_stats_summary_shape(tmp_path):
+    with MappingService(tmp_path, workers=0) as svc:
+        svc.map(TuneRequest("cannon"))
+        svc.map(TuneRequest("cannon"))
+        svc.submit(TuneRequest("cannon", deadline_s=-1.0))
+        svc.drain()
+        s = svc.stats.summary()
+    assert s["submitted"] == 3
+    assert s["completed"] == 2
+    assert s["cache_hits"] == 1 and s["cold"] == 1
+    assert s["rejected"] == {"deadline": 1} and s["shed"] == 1
+    assert s["requests_per_s"] > 0
+    for block in (s["latency"], s["stages"]["wait"], s["stages"]["cache"],
+                  s["stages"]["search"]):
+        assert set(block) == {"p50_s", "p95_s", "p99_s"}
+    json.dumps(s)                       # the surface must be JSON-clean
+
+
+def test_warm_provenance_and_never_worse(tmp_path):
+    """A near-miss scale seeded from the cache must never rank worse
+    than the cold search at that scale."""
+    with MappingService(tmp_path, workers=0) as svc:
+        svc.map(TuneRequest("pennant"))
+        seeded = svc.map(TuneRequest("pennant", procs=64))
+    clear_caches()
+    with MappingService(tmp_path / "coldroot", workers=0,
+                        warm_start=False) as svc2:
+        cold = svc2.map(TuneRequest("pennant", procs=64))
+    assert isinstance(seeded, MappingPlan) and isinstance(cold, MappingPlan)
+    assert seeded.placed_cost <= cold.placed_cost
+    if seeded.warm_seeds:
+        assert seeded.provenance == "warm"
+
+
+# --------------------------------------------------------------------- misc
+def test_value_tag_matches_cost_model():
+    from repro.sim.cost import SimulatedTimeCostModel, spec_for
+    from repro.sim.collectives import CollectivePattern
+
+    pattern = CollectivePattern(kind="shift")
+    for engine, dtype in (("batched", "float64"), ("batched-jax", "float64"),
+                          ("batched-jax", "float32"), ("event", "float64")):
+        model = SimulatedTimeCostModel(
+            pattern=pattern, spec=spec_for((2, 2)), step_flops=1.0,
+            engine=engine, dtype=dtype)
+        assert value_tag(engine, dtype) == model.value_tag
+
+
+def test_plan_key_for_matches_report_procs():
+    from repro import apps
+    from repro.sim.cost import time_tuned_app
+
+    tuned = time_tuned_app(apps.get("cannon"))
+    n, key, tag = plan_key_for(tuned, None, engine="batched")
+    assert n == tuned.default_procs
+    assert tag == "numpy-f64"
+    n2, key2, _ = plan_key_for(tuned, 16, engine="batched")
+    assert n2 == 16 and key2 != key
+
+
+def test_load_trace_parses_jsonl(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    path.write_text(
+        "# comment\n"
+        '{"app": "cannon"}\n'
+        "\n"
+        '{"app": "stencil", "procs": 16, "priority": 1,'
+        ' "machine_shape": [4, 4]}\n'
+    )
+    reqs = load_trace(path)
+    assert [r.app for r in reqs] == ["cannon", "stencil"]
+    assert reqs[1].procs == 16 and reqs[1].machine_shape == (4, 4)
+
+
+def test_replay_resolves_in_submission_order(tmp_path):
+    trace = [TuneRequest("cannon"), TuneRequest("cannon"),
+             TuneRequest("badname")]
+    with MappingService(tmp_path, workers=0) as svc:
+        results = replay(svc, trace)
+    assert isinstance(results[0], MappingPlan)
+    # The identical repeat either coalesced into the same batch's search
+    # ("cold", zero extra searches) or hit the plan cache.
+    assert isinstance(results[1], MappingPlan)
+    assert _essence(results[0]) == _essence(results[1])
+    assert svc.stats.searches == 1
+    assert isinstance(results[2], Rejected)
+
+
+def test_serve_cli_demo_smoke(tmp_path, capsys):
+    from repro.serving.serve import main
+
+    rc = main(["--demo", "4", "--cache-dir", str(tmp_path),
+               "--workers", "0", "--json"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert '"submitted": 4' in out

@@ -61,3 +61,61 @@ def test_slot_reuse_isolation(served_model):
     shared.run_until_drained()
 
     assert r1.generated == r2.generated
+
+
+# ----------------------------------------------------- shared percentile math
+def test_percentile_empty_returns_zero():
+    from repro.serving.stats import percentile
+
+    assert percentile([], 50) == 0.0
+    assert percentile([], 99) == 0.0
+
+
+def test_percentile_single_sample_is_every_quantile():
+    from repro.serving.stats import percentile
+
+    for q in (0, 1, 50, 95, 99, 100):
+        assert percentile([7.0], q) == 7.0
+
+
+def test_percentile_two_samples():
+    from repro.serving.stats import percentile
+
+    data = [2.0, 1.0]                  # unsorted on purpose
+    assert percentile(data, 50) == 1.0     # ceil(0.5*2)=1 -> lower sample
+    assert percentile(data, 95) == 2.0     # ceil(0.95*2)=2 -> upper sample
+    assert percentile(data, 99) == 2.0
+    assert percentile(data, 0) == 1.0      # rank clamps to 1
+
+
+def test_percentile_nearest_rank_no_off_by_one():
+    from repro.serving.stats import percentile
+
+    data = list(range(1, 101))             # 1..100
+    assert percentile(data, 50) == 50
+    assert percentile(data, 95) == 95      # NOT data[95] == 96
+    assert percentile(data, 99) == 99
+    assert percentile(data, 100) == 100
+
+
+def test_percentile_rejects_out_of_range_q():
+    import pytest as _pytest
+
+    from repro.serving.stats import percentile
+
+    with _pytest.raises(ValueError):
+        percentile([1.0], 101)
+    with _pytest.raises(ValueError):
+        percentile([1.0], -1)
+
+
+def test_serve_stats_summary_uses_shared_percentiles():
+    from repro.serving.scheduler import ServeStats
+    from repro.serving.stats import percentile
+
+    stats = ServeStats(completed=3, steps=5, tokens_out=9,
+                       latencies=[0.3, 0.1, 0.2])
+    s = stats.summary()
+    assert s["p50_latency_s"] == percentile(stats.latencies, 50) == 0.2
+    assert s["p95_latency_s"] == percentile(stats.latencies, 95) == 0.3
+    assert s["p99_latency_s"] == 0.3       # p99 present and correct

@@ -191,3 +191,91 @@ def test_enumerator_backs_the_grid_axis():
     assert set(space.grids(64)) == set(enumerate_factorizations(64, 3))
     cannon_space = apps.get("cannon").search_space
     assert cannon_space.grids(64) == [(8, 8)]
+
+
+# ---------------------------------------------------------------- warm start
+def test_warm_start_with_known_winner_is_bit_identical():
+    """Seeding every registry app's search with its own cold winner must
+    change nothing: the seed is already shortlisted, so the superset
+    beam degenerates to the cold beam (warm_seeds == 0, leaderboards
+    bit-equal)."""
+    for app in ALL_APPS:
+        cold = tune_app(app, 64)
+        warm = tune_app(app, 64, warm_start=[cold.best.candidate])
+        assert warm.warm_seeds == 0, app.name
+        assert warm.best.candidate == cold.best.candidate, app.name
+        assert ([ (s.candidate, s.volume, s.placed_cost)
+                  for s in warm.leaderboard ]
+                == [ (s.candidate, s.volume, s.placed_cost)
+                     for s in cold.leaderboard ]), app.name
+
+
+def test_warm_start_never_worse_than_cold():
+    """Seeds strictly widen the beam, so the warm best can never rank
+    below the cold best — across the registry, with cross-scale seeds
+    refit from the paper-scale winner."""
+    from repro.search.tuner import refit_candidate
+
+    for app in ALL_APPS:
+        cold_small = tune_app(app)
+        procs = cold_small.procs * 4
+        if not app.search_space.grids(procs):
+            continue
+        cold = tune_app(app, procs)
+        seed = refit_candidate(app.search_space, cold_small.best.candidate,
+                               procs)
+        warm = tune_app(app, procs, warm_start=[seed] if seed else [])
+        assert warm.best.rank_cost <= cold.best.rank_cost, app.name
+
+
+def test_warm_start_stale_seed_skipped_not_fatal():
+    """Wrong-rank grids, infeasible grids, unknown options and malformed
+    seeds are all skipped; the report equals the cold one."""
+    app = apps.get("cannon")
+    cold = tune_app(app, 64)
+    stale = [
+        Candidate(grid=(4, 4, 4), dist=("bc",) * 3, order=(0, 1, 2)),
+        Candidate(grid=(3, 5), dist=("bc", "bc"), order=(0, 1)),
+        Candidate(grid=(8, 8), dist=("bc", "bc"), order=(0, 1),
+                  options=(("nosuch", "opt"),)),
+        object(),                       # not even a Candidate
+    ]
+    warm = tune_app(app, 64, warm_start=stale)
+    assert warm.warm_seeds == 0
+    assert warm.best.candidate == cold.best.candidate
+    assert warm.variants_evaluated == cold.variants_evaluated
+
+
+def test_warm_start_novel_seed_joins_the_beam():
+    """A valid seed outside the beam shortlist widens the search and is
+    counted (and noted) in the report."""
+    app = apps.get("johnson")
+    space = app.search_space
+    cold = tune_app(app, 64, beam=1)
+    shortlisted = {cold.best.candidate.grid}
+    novel_grid = next(g for g in space.grids(64) if g not in shortlisted)
+    seed = Candidate(grid=novel_grid, dist=("bc",) * 3, order=(0, 1, 2))
+    warm = tune_app(app, 64, beam=1, warm_start=[seed])
+    assert warm.warm_seeds == 1
+    assert "warm-start" in warm.note
+    assert warm.variants_evaluated > cold.variants_evaluated
+    assert warm.best.rank_cost <= cold.best.rank_cost
+
+
+def test_refit_candidate_carries_and_repairs():
+    from repro.search.tuner import refit_candidate
+
+    space = apps.get("cannon").search_space
+    # Exact-feasible grid carries over untouched.
+    c = Candidate(grid=(8, 8), dist=("cb", "bc"), order=(1, 0))
+    r = refit_candidate(space, c, 64)
+    assert r == c
+    # Different scale: nearest feasible grid, dist/order preserved.
+    r2 = refit_candidate(space, c, 16)
+    assert r2.grid == (4, 4) and r2.dist == ("cb", "bc")
+    assert r2.order == (1, 0)
+    # Infeasible target scale (no square grid of 6) -> None.
+    assert refit_candidate(space, c, 6) is None
+    # Wrong-rank seed -> None.
+    bad = Candidate(grid=(2, 2, 2), dist=("bc",) * 3, order=(0, 1, 2))
+    assert refit_candidate(space, bad, 64) is None
