@@ -34,6 +34,7 @@ from benchmarks import (
     mapper_tuning,
     mapping_eval,
     perf_iterations,
+    resilience_bench,
     roofline_report,
     serve_bench,
     sim_eval,
@@ -54,6 +55,9 @@ SECTIONS = {
     "serve_bench": ("Tuning service: cold vs warm trace replay + "
                     "warm-started search (+ BENCH_serve.json)",
                     serve_bench.run),
+    "resilience_bench": ("Fault recovery: warm remap vs cold retune + "
+                         "degraded-pricing parity (+ BENCH_resilience.json)",
+                         resilience_bench.run),
     "roofline": ("Roofline table (from dry-run artifacts)",
                  roofline_report.run),
     "perf_iterations": ("§Perf hillclimb summary (from recorded artifacts)",
@@ -119,6 +123,15 @@ def _trajectory(sections: dict) -> dict:
                 "cold_p99_s": rp.get("cold_p99_s"),
                 "warm_p99_s": rp.get("warm_p99_s"),
                 "warm_start_ok": (res.get("warm_start") or {}).get("ok"),
+            })
+        elif key == "resilience_bench" and isinstance(res, dict):
+            rm = res.get("remap") or {}
+            pa = res.get("parity") or {}
+            row.update({
+                "warm_remap_speedup": rm.get("speedup"),
+                "remap_quality_ok": (rm.get("placement_avoids_dead")
+                                     and rm.get("not_worse_than_stale")),
+                "degraded_parity_max_abs_s": pa.get("max_abs_diff_s"),
             })
         elif key == "mapping_eval" and isinstance(res, dict):
             row["speedup"] = res.get("speedup")

@@ -15,6 +15,7 @@ asks the planner for a `MeshPlan`, the same way the matmul benchmarks ask
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 from repro.core.commvolume import LMCommModel, LMStepCostModel
 from repro.core.decompose import enumerate_factorizations
@@ -68,6 +69,53 @@ class LMWorkload:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class MeshCostModel(LMStepCostModel):
+    """:func:`plan_mesh`'s objective *and* its feasibility constraints on
+    the :class:`~repro.core.commvolume.CostModel` protocol: an infeasible
+    ``(dp, tp)`` raises ``ValueError`` instead of silently pricing, so the
+    tuner's enumerative machinery (``feasible_procs`` /
+    ``nearest_feasible_procs``) answers "can ``n`` chips host this
+    workload?" the same way it answers it for the registry apps."""
+
+    wl: LMWorkload = None
+    max_tp: int = 64
+    use_ep: bool | None = None
+    name = "lm_mesh"
+
+    @property
+    def moe(self) -> bool:
+        return self.wl.n_experts > 0 if self.use_ep is None else self.use_ep
+
+    def ep_for(self, tp: int) -> int:
+        return tp if (self.moe and self.wl.n_experts % tp == 0) else 1
+
+    def cost(self, factors: Sequence[int]) -> float:
+        if len(factors) != 2:
+            raise ValueError(f"expected a (dp, tp) grid, got {tuple(factors)}")
+        dp, tp = (int(x) for x in factors)
+        wl = self.wl
+        if tp > self.max_tp:
+            raise ValueError(f"tp={tp} exceeds max_tp={self.max_tp}")
+        if dp > wl.global_batch or wl.global_batch % dp != 0:
+            raise ValueError(f"dp={dp} does not divide batch {wl.global_batch}")
+        if tp > 1 and (wl.n_heads % tp != 0 or wl.d_model % tp != 0):
+            raise ValueError(f"tp={tp} does not shard heads/d_model evenly")
+        return super().cost((dp, tp, self.ep_for(tp)))
+
+
+def mesh_search_space(wl: LMWorkload, *, max_tp: int = 64,
+                      use_ep: bool | None = None):
+    """The ``(dp, tp)`` mesh as a tuner :class:`~repro.search.space.SearchSpace`
+    — :func:`repro.runtime.resilience.elastic_plan` routes survivor-count
+    feasibility through this instead of a power-of-two shortcut."""
+    from repro.search.space import SearchSpace
+
+    model = MeshCostModel(model=wl.comm_model(), wl=wl, max_tp=max_tp,
+                          use_ep=use_ep)
+    return SearchSpace(rank=2, cost_model=lambda procs, opts: model)
+
+
 def plan_mesh(
     n_chips: int,
     wl: LMWorkload,
@@ -84,30 +132,24 @@ def plan_mesh(
         we require ep == tp for MoE archs when use_ep (experts ride the
         model axis — one-axis EP, the deployment-standard layout).
     """
-    objective = LMStepCostModel(wl.comm_model())
-    moe = wl.n_experts > 0 if use_ep is None else use_ep
-    k = 2
+    objective = MeshCostModel(model=wl.comm_model(), wl=wl, max_tp=max_tp,
+                              use_ep=use_ep)
     best: tuple[float, tuple[int, ...]] | None = None
     considered = 0
-    for f in enumerate_factorizations(n_chips, k):
-        dp, tp = f
+    for f in enumerate_factorizations(n_chips, 2):
         considered += 1
-        if tp > max_tp or dp > wl.global_batch:
+        try:
+            cost = objective.cost(f)
+        except ValueError:
             continue
-        if wl.global_batch % dp != 0:
-            continue
-        if tp > 1 and (wl.n_heads % tp != 0 or wl.d_model % tp != 0):
-            continue
-        ep = tp if (moe and wl.n_experts % tp == 0) else 1
-        cost = objective((dp, tp, ep))
         key = (cost, f)
         if best is None or key < best:
             best = key
     if best is None:
         raise ValueError(f"no feasible (dp, tp) factorization of {n_chips}")
     dp, tp = best[1]
-    ep = tp if (moe and wl.n_experts % tp == 0) else 1
-    return MeshPlan(dp=dp, tp=tp, ep=ep, step_comm_bytes=best[0],
+    return MeshPlan(dp=dp, tp=tp, ep=objective.ep_for(tp),
+                    step_comm_bytes=best[0],
                     candidates_considered=considered)
 
 

@@ -123,6 +123,152 @@ class MachineSpec:
         return self.level_bws[level]
 
 
+@dataclasses.dataclass(frozen=True)
+class DegradedMachine:
+    """A degraded *view* over a :class:`MachineSpec`: dead processors plus
+    per-level port contention.
+
+    ``dead_procs`` are flat processor ids (row-major over ``spec.shape``)
+    that are unplaceable — a plan that puts work on one is invalid and the
+    simulator refuses to price it. ``contention`` is one tuple per level
+    (outermost first), one slowdown factor per *port* at that level
+    (``spec.level_ports``): a factor ``c >= 1`` means background traffic is
+    stealing that port's bandwidth, so bytes drain ``c`` times slower.
+    Message latency (alpha) is unaffected — contention is a bandwidth
+    phenomenon. ``contention=None`` means every factor is exactly 1.0.
+
+    A trivial view (no dead procs, all factors 1.0) must price
+    bit-identically to the healthy machine; ``Topology.from_spec``
+    normalizes it to ``None`` to guarantee that.
+    """
+
+    spec: MachineSpec
+    dead_procs: tuple[int, ...] = ()
+    contention: tuple[tuple[float, ...], ...] | None = None
+
+    def __post_init__(self) -> None:
+        dead = tuple(sorted({int(p) for p in self.dead_procs}))
+        object.__setattr__(self, "dead_procs", dead)
+        n = self.spec.nprocs
+        for p in dead:
+            if not 0 <= p < n:
+                raise ValueError(f"dead proc {p} out of range for {n} procs")
+        if len(dead) >= n:
+            raise ValueError("cannot kill every processor")
+        if self.contention is not None:
+            ports = self.spec.level_ports
+            if len(self.contention) != len(ports):
+                raise ValueError(
+                    f"contention needs one tuple per level: got "
+                    f"{len(self.contention)} for {len(ports)} levels"
+                )
+            norm = []
+            for lvl, (row, nport) in enumerate(zip(self.contention, ports)):
+                row = tuple(float(c) for c in row)
+                if len(row) != nport:
+                    raise ValueError(
+                        f"contention level {lvl} needs {nport} port factors, "
+                        f"got {len(row)}"
+                    )
+                if any(c < 1.0 for c in row):
+                    raise ValueError(
+                        f"contention factors must be >= 1.0 (level {lvl}: {row})"
+                    )
+                norm.append(row)
+            object.__setattr__(self, "contention", tuple(norm))
+
+    # ------------------------------------------------------------- queries
+    @property
+    def is_trivial(self) -> bool:
+        """True when this view prices identically to the healthy machine."""
+        if self.dead_procs:
+            return False
+        if self.contention is None:
+            return True
+        return all(c == 1.0 for row in self.contention for c in row)
+
+    @property
+    def n_alive(self) -> int:
+        return self.spec.nprocs - len(self.dead_procs)
+
+    def alive_procs(self) -> tuple[int, ...]:
+        dead = set(self.dead_procs)
+        return tuple(p for p in range(self.spec.nprocs) if p not in dead)
+
+    def port_contention(self, level: int) -> tuple[float, ...]:
+        """Per-port slowdown factors at ``level`` (all 1.0 when unset)."""
+        nport = self.spec.level_ports[level]
+        if self.contention is None:
+            return (1.0,) * nport
+        return self.contention[level]
+
+    # -------------------------------------------------------- constructors
+    @classmethod
+    def healthy(cls, spec: MachineSpec) -> "DegradedMachine":
+        return cls(spec=spec)
+
+    @classmethod
+    def fail_procs(cls, spec: MachineSpec,
+                   procs: Sequence[int]) -> "DegradedMachine":
+        return cls(spec=spec, dead_procs=tuple(int(p) for p in procs))
+
+    @classmethod
+    def fail_nodes(cls, spec: MachineSpec, level: int,
+                   nodes: Sequence[int]) -> "DegradedMachine":
+        """Kill whole level-``level`` subtrees (e.g. full nodes): every
+        processor whose flat id falls inside one of the named subtrees."""
+        stride = spec.level_strides[level]
+        nport = spec.level_ports[level]
+        dead = []
+        for node in nodes:
+            node = int(node)
+            if not 0 <= node < nport:
+                raise ValueError(
+                    f"level-{level} subtree {node} out of range "
+                    f"(machine has {nport})"
+                )
+            dead.extend(range(node * stride, (node + 1) * stride))
+        return cls(spec=spec, dead_procs=tuple(dead))
+
+    @classmethod
+    def contend(cls, spec: MachineSpec, level: int,
+                factors: dict[int, float]) -> "DegradedMachine":
+        """Background traffic on specific ports of one level:
+        ``factors[port] = c`` slows that port's byte drain by ``c``x."""
+        rows = []
+        for lvl, nport in enumerate(spec.level_ports):
+            row = [1.0] * nport
+            if lvl == level:
+                for port, c in factors.items():
+                    port = int(port)
+                    if not 0 <= port < nport:
+                        raise ValueError(
+                            f"port {port} out of range for level {lvl} "
+                            f"({nport} ports)"
+                        )
+                    row[port] = float(c)
+            rows.append(tuple(row))
+        return cls(spec=spec, contention=tuple(rows))
+
+    def merged(self, other: "DegradedMachine") -> "DegradedMachine":
+        """Compose two degradations of the same machine: union of dead
+        procs, product of per-port contention factors."""
+        if other.spec != self.spec:
+            raise ValueError("cannot merge degradations of different machines")
+        dead = tuple(set(self.dead_procs) | set(other.dead_procs))
+        if self.contention is None and other.contention is None:
+            cont = None
+        else:
+            a = [self.port_contention(lvl)
+                 for lvl in range(len(self.spec.shape))]
+            b = [other.port_contention(lvl)
+                 for lvl in range(len(self.spec.shape))]
+            cont = tuple(
+                tuple(x * y for x, y in zip(ra, rb)) for ra, rb in zip(a, b)
+            )
+        return DegradedMachine(spec=self.spec, dead_procs=dead, contention=cont)
+
+
 def modeled_step_time(flops_total: float, comm_elems: float, chips: int,
                       *, elem_bytes: int = 4,
                       spec: "MachineSpec | None" = None) -> float:

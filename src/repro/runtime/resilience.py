@@ -18,7 +18,6 @@ treats failure as the steady state:
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from typing import Any, Callable
 
@@ -31,14 +30,22 @@ class SimulatedFailure(RuntimeError):
 
 @dataclasses.dataclass
 class FailureInjector:
-    """Raises SimulatedFailure at the scheduled steps (deterministic)."""
+    """Raises SimulatedFailure at the scheduled steps (deterministic).
+
+    Each scheduled step fires **at most once**: after a restore rewinds
+    the loop past an already-fired step, re-executing it must not
+    re-raise — a real node dies once, and the re-fire would burn one
+    restart per replay until ``max_restarts`` was exhausted."""
 
     fail_at_steps: tuple[int, ...] = ()
     max_failures: int = 1_000_000
     fired: int = 0
+    fired_steps: set = dataclasses.field(default_factory=set)
 
     def check(self, step: int) -> None:
-        if self.fired < self.max_failures and step in self.fail_at_steps:
+        if (self.fired < self.max_failures and step in self.fail_at_steps
+                and step not in self.fired_steps):
+            self.fired_steps.add(step)
             self.fired += 1
             raise SimulatedFailure(f"injected failure at step {step}")
 
@@ -54,9 +61,19 @@ class Supervisor:
     def run(self, *, state, start_step: int, n_steps: int,
             step_fn: Callable[[int, Any], Any],
             save_every: int, extra: dict | None = None,
-            injector: FailureInjector | None = None):
+            injector: FailureInjector | None = None,
+            remap_fn: Callable[[Exception], Any] | None = None):
         """Drives the loop; on failure restores the latest checkpoint and
-        resumes. Returns (final_state, history)."""
+        resumes. Returns (final_state, history).
+
+        ``remap_fn`` makes the restart *fault-aware*: called with the
+        failure before each restore, it may return a remap plan (e.g.
+        :func:`elastic_plan`'s output, or a
+        :class:`~repro.serving.mapsvc.RemapRequest` resolution). A dict
+        plan whose ``"step_fn"`` entry is callable swaps the step
+        function — restore-with-new-placement — and the plan (minus the
+        callable) is recorded in the history as a ``remapped`` event.
+        Returning ``None`` keeps the old plan (plain restart)."""
         history: list[dict] = []
         step = start_step
         while step < n_steps:
@@ -74,6 +91,18 @@ class Supervisor:
                 self.restarts += 1
                 if self.restarts > self.max_restarts:
                     raise
+                if remap_fn is not None:
+                    plan = remap_fn(e)
+                    if plan is not None:
+                        recorded = plan
+                        if isinstance(plan, dict):
+                            new_fn = plan.get("step_fn")
+                            if callable(new_fn):
+                                step_fn = new_fn
+                            recorded = {k: v for k, v in plan.items()
+                                        if k != "step_fn"}
+                        history.append({"step": step, "event": "remapped",
+                                        "plan": recorded})
                 restored = self.checkpoint_manager.latest_step()
                 if restored is None:
                     # No checkpoint yet: restart from the initial state.
@@ -125,20 +154,45 @@ class StragglerMonitor:
         }
 
 
-def elastic_plan(n_chips_surviving: int, workload) -> dict:
+def elastic_plan(n_chips_surviving: int, workload, *,
+                 max_tp: int = 64) -> dict:
     """Re-plan parallelism for the surviving chip count (Mapple decompose).
 
     workload: repro.core.autosharder.LMWorkload. Returns the new MeshPlan +
     the resharding recipe (restore checkpoint under the new shardings).
-    """
-    from repro.core.autosharder import plan_mesh
 
-    # Degrade to the largest power-of-two no bigger than the survivor count
-    # (torus wiring constraint on real pods).
-    usable = 2 ** int(math.floor(math.log2(max(n_chips_surviving, 1))))
-    plan = plan_mesh(usable, workload)
+    The usable chip count routes through the tuner's feasibility
+    machinery: the mesh planner's divisibility constraints become a
+    search space (:func:`~repro.core.autosharder.mesh_search_space`) and
+    the plan keeps every survivor the space can host — 12 of 16 chips
+    stay 12 when ``dp=12`` divides the batch, instead of collapsing to
+    the power-of-two 8. When the survivor count itself is infeasible,
+    :func:`~repro.search.tuner.nearest_feasible_procs` lands on the
+    nearest feasible count that does not exceed the survivors.
+    """
+    from repro.core.autosharder import mesh_search_space, plan_mesh
+    from repro.search.tuner import feasible_procs, nearest_feasible_procs
+
+    space = mesh_search_space(workload, max_tp=max_tp)
+    n = max(int(n_chips_surviving), 1)
+    if feasible_procs(space, n):
+        usable = n
+    else:
+        near = nearest_feasible_procs(space, n, count=8,
+                                      max_delta=max(n - 1, 1))
+        usable = next((m for m in near if m <= n), None)
+        if usable is None:     # every near-feasible count needs more chips
+            usable = next(
+                (m for m in range(n - 1, 0, -1) if feasible_procs(space, m)),
+                None)
+        if usable is None:
+            raise ValueError(
+                f"no feasible chip count <= {n} for this workload"
+            )
+    plan = plan_mesh(usable, workload, max_tp=max_tp)
     return {
         "usable_chips": usable,
+        "idle_chips": n - usable,
         "mesh": {"data": plan.dp, "model": plan.tp},
         "ep": plan.ep,
         "resharding": "restore latest checkpoint with new param shardings",

@@ -25,16 +25,26 @@ from repro.search.tuner import (
     tune_app,
     tune_registry,
 )
+from repro.search.remap import (
+    RemapResult,
+    degraded_from_failures,
+    remap_plan,
+    submachine_options,
+)
 
 __all__ = [
     "BLOCK_CYCLIC",
     "CYCLIC_BLOCK",
     "Candidate",
     "CandidateProgram",
+    "RemapResult",
     "SearchSpace",
     "ScoredCandidate",
     "TuningReport",
     "build_program",
+    "degraded_from_failures",
+    "remap_plan",
+    "submachine_options",
     "cross_node_fraction",
     "node_split",
     "render_source",

@@ -314,6 +314,12 @@ class PendingTune:
         seen, evaluated, app = self.seen, self.evaluated, self.app
         for volume, grid, options in self.shortlist:
             survivors: list[tuple[ScoredCandidate, np.ndarray, bytes]] = []
+            model = space.cost_model(n, dict(options))
+            # A degraded machine (dead procs, non-uniform port contention)
+            # breaks the per-level relabeling symmetry, so its dedup keys
+            # and price-cache rows use the raw placement bytes instead of
+            # the isomorphism-class representative.
+            degraded = getattr(model, "degraded", None)
             for cand in space.variants(grid, options, machine_shape):
                 program = build_program(machine_shape, cand,
                                         f"{app.name}_cand")
@@ -325,8 +331,11 @@ class PendingTune:
                 # locality; distinct option points stay on the
                 # leaderboard even when their permutations coincide
                 # (their volumes differ).
-                canon = canonical_assignment(assign,
-                                             machine_shape).tobytes()
+                if degraded is not None:
+                    canon = np.asarray(assign, dtype=np.int64).tobytes()
+                else:
+                    canon = canonical_assignment(assign,
+                                                 machine_shape).tobytes()
                 key = (cand.grid, cand.options, canon)
                 twin = seen.get(key)
                 if twin is not None:  # isomorphic variant already seen
@@ -357,7 +366,6 @@ class PendingTune:
             # ranking variants by locality alone.
             if not survivors:
                 continue
-            model = space.cost_model(n, dict(options))
             engine = getattr(model, "beam_pricer", lambda g: None)(grid)
             stack = np.stack([a for _, a, _ in survivors])
             entries = [e for e, _, _ in survivors]
@@ -456,7 +464,8 @@ class PendingTune:
 
 def prepare_tune(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
                  leaderboard: int = DEFAULT_LEADERBOARD,
-                 warm_start: Iterable[Candidate] = ()) -> PendingTune:
+                 warm_start: Iterable[Candidate] = (),
+                 restrict: Iterable[Candidate] | None = None) -> PendingTune:
     """Phases 1–2 of :func:`tune_app`, returned as a :class:`PendingTune`.
 
     ``warm_start`` seeds (cached winners from a nearby scale, refit via
@@ -465,6 +474,15 @@ def prepare_tune(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
     warm search can never rank worse than the cold one, and when every
     seed is already shortlisted the report is bit-identical to cold
     (``warm_seeds == 0``). Stale or incompatible seeds are skipped.
+
+    ``restrict`` turns Phase 1 into a *seeded* scan: only the given
+    candidates' (grid, options) points (plus the space's default
+    candidate as a safety net) are scored, instead of the full
+    combos × grids enumeration. This is the fast path for failure
+    remaps, where a known-good plan exists and scoring thousands of
+    analytic points — each a device pricing for time-domain spaces —
+    would dominate recovery latency. Falls back to the full enumeration
+    when every restricted point is stale or infeasible.
     """
     space: SearchSpace | None = app.search_space
     if space is None:
@@ -473,17 +491,37 @@ def prepare_tune(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
     n, note = _feasible_procs(space, app, procs)
     machine_shape = tuple(int(s) for s in app.machine_shape(n))
 
-    # Phase 1: analytic scoring of every (grid, options) point.
+    # Phase 1: analytic scoring of every (grid, options) point — or, under
+    # ``restrict``, of just the seeded points.
     grids = space.grids(n)
     scored: list[tuple[float, tuple[int, ...], tuple[tuple[str, str], ...]]] = []
-    for options in space.option_combos():
-        model = space.cost_model(n, dict(options))
-        for grid in grids:
-            try:
-                volume = float(model.cost(grid))
-            except ValueError:
+    if restrict is not None:
+        combo_set = set(space.option_combos())
+        grid_set = set(grids)
+        wanted = list(restrict)
+        default_cand = space.default_candidate(n)
+        if default_cand is not None:
+            wanted.append(default_cand)
+        seen_points: set[tuple] = set()
+        for cand in wanted:
+            entry = _admit_seed(space, cand, n, grid_set, combo_set)
+            if entry is None or (entry[1], entry[2]) in seen_points:
                 continue
-            scored.append((volume, grid, options))
+            seen_points.add((entry[1], entry[2]))
+            scored.append(entry)
+        if scored:
+            extra = (f"restricted search: {len(scored)} seeded point(s) "
+                     f"scored in place of the full enumeration")
+            note = f"{note}; {extra}" if note else extra
+    if not scored:
+        for options in space.option_combos():
+            model = space.cost_model(n, dict(options))
+            for grid in grids:
+                try:
+                    volume = float(model.cost(grid))
+                except ValueError:
+                    continue
+                scored.append((volume, grid, options))
     if not scored:
         near = nearest_feasible_procs(space, n, max_delta=256)
         hint = f"; nearest feasible proc counts: {near}" if near else ""
@@ -534,7 +572,8 @@ def prepare_tune(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
 def tune_app(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
              leaderboard: int = DEFAULT_LEADERBOARD,
              pipeline: bool | None = None,
-             warm_start: Iterable[Candidate] = ()) -> TuningReport:
+             warm_start: Iterable[Candidate] = (),
+             restrict: Iterable[Candidate] | None = None) -> TuningReport:
     """Search one application's mapper space; returns the full report.
 
     ``pipeline`` controls Phase 3's execution shape: ``True`` streams
@@ -551,7 +590,7 @@ def tune_app(app, procs: int | None = None, *, beam: int = DEFAULT_BEAM,
     cold search, and bit-identical to it when no seed is novel.
     """
     pending = prepare_tune(app, procs, beam=beam, leaderboard=leaderboard,
-                           warm_start=warm_start)
+                           warm_start=warm_start, restrict=restrict)
 
     # Phase 3: variant expansion + batch pricing — as a producer/consumer
     # pipeline (expansion of group k+1 overlaps device pricing of group

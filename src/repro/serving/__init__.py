@@ -13,6 +13,7 @@ from repro.serving.mapsvc import (
     MappingPlan,
     MappingService,
     Rejected,
+    RemapRequest,
     Ticket,
     TuneRequest,
 )
@@ -26,6 +27,7 @@ __all__ = [
     "MappingService",
     "PlanCache",
     "Rejected",
+    "RemapRequest",
     "Request",
     "ServeStats",
     "ServiceStats",

@@ -56,6 +56,7 @@ from repro.search.tuner import (
     refit_candidate,
 )
 from repro.search.pipeline import price_jobs
+from repro.search.remap import remap_plan
 from repro.serving.plan_cache import PlanCache, plan_key
 from repro.serving.stats import ServiceStats
 from repro.sim.cost import (
@@ -101,6 +102,31 @@ class TuneRequest:
     timeout_s: float | None = None
 
 
+@dataclasses.dataclass(frozen=True)
+class RemapRequest:
+    """A recovery question: processors failed under a running plan —
+    re-place the work on the survivors, *now*.
+
+    ``failures`` is anything
+    :func:`~repro.search.remap.degraded_from_failures` accepts (a
+    ``DegradedMachine``, ``NodeFailure``\\ s, node-death ``FaultEvent``\\ s,
+    bare processor ids). The default ``priority=-1`` sorts remaps ahead
+    of every routine tune in the admission heap — a cluster bleeding
+    step time outranks speculative what-if tuning. ``mode`` picks the
+    warm restricted search (default) or the full cold baseline."""
+
+    app: str
+    failures: object
+    procs: int | None = None
+    machine_shape: tuple[int, ...] | None = None
+    engine: str | None = None
+    dtype: str | None = None
+    mode: str = "warm"
+    priority: int = -1
+    deadline_s: float | None = None
+    timeout_s: float | None = None
+
+
 @dataclasses.dataclass
 class MappingPlan:
     """A resolved mapping: the tuner's winner plus service provenance.
@@ -126,6 +152,12 @@ class MappingPlan:
     warm_seeds: int = 0
     elapsed_s: float = 0.0
     timings: dict = dataclasses.field(default_factory=dict)
+    #: Recovery facts when this plan answered a :class:`RemapRequest`
+    #: (``provenance == "remap"``): sub_shape, proc_map, the physical
+    #: placement, and degraded/stale step times. ``None`` for routine
+    #: tunes; never part of the cached payload (a remap answers one
+    #: concrete failure, not the app x procs question the cache keys).
+    remap: dict | None = None
 
     def payload(self) -> dict:
         """The JSON-serializable plan-cache record (provenance and
@@ -170,6 +202,8 @@ class MappingPlan:
         out = self.payload()
         out.update(provenance=self.provenance, warm_seeds=self.warm_seeds,
                    elapsed_s=self.elapsed_s, timings=dict(self.timings))
+        if self.remap is not None:
+            out["remap"] = dict(self.remap)
         return out
 
 
@@ -186,11 +220,13 @@ class Rejected:
 class Ticket:
     """The caller's handle on one submitted request."""
 
-    def __init__(self, request: TuneRequest, submit_t: float) -> None:
+    def __init__(self, request: "TuneRequest | RemapRequest",
+                 submit_t: float) -> None:
         self.request = request
         self.submit_t = submit_t
         self._event = threading.Event()
         self._result: "MappingPlan | Rejected | None" = None
+        self._requeued = False         # one free retry after a worker crash
 
     @property
     def done(self) -> bool:
@@ -337,7 +373,7 @@ class MappingService:
             t.start()
 
     # ------------------------------------------------------------- frontend
-    def submit(self, request: TuneRequest) -> Ticket:
+    def submit(self, request: "TuneRequest | RemapRequest") -> Ticket:
         """Enqueue one request. Always returns a ticket; admission
         control resolves it immediately with ``Rejected("queue-full")``
         or ``Rejected("closed")`` when the service cannot take it."""
@@ -385,7 +421,7 @@ class MappingService:
             if not batch:
                 return resolved
             resolved += len(batch)
-            self._process(batch)
+            self._process_guarded(batch)
 
     # ------------------------------------------------------------ lifecycle
     def close(self) -> None:
@@ -454,7 +490,39 @@ class MappingService:
             batch = self._take_batch(block=True)
             if not batch:
                 return                  # closed and queue empty
+            self._process_guarded(batch)
+
+    def _process_guarded(self, batch: list[Ticket]) -> None:
+        """Run one batch, surviving a crash of the processing code
+        itself (``_process`` catches per-request errors into typed
+        ``Rejected``\\ s; this guard catches everything it could not —
+        the "worker thread dies" case). Each still-unresolved ticket is
+        requeued exactly once; a second crash resolves it with
+        ``Rejected("error")`` so callers never hang on a dropped
+        request."""
+        try:
             self._process(batch)
+        except BaseException as exc:  # noqa: BLE001 - survive the worker
+            with self._work:
+                self.stats.worker_crashes += 1
+                for ticket in batch:
+                    if ticket.done:
+                        continue
+                    if ticket._requeued:
+                        self._resolve_locked(ticket, Rejected(
+                            "error",
+                            f"worker crashed twice on this request: {exc}",
+                            ticket.request.app))
+                        continue
+                    ticket._requeued = True
+                    deadline = (ticket.submit_t + ticket.request.deadline_s
+                                if ticket.request.deadline_s is not None
+                                else float("inf"))
+                    heapq.heappush(
+                        self._heap,
+                        (ticket.request.priority, deadline,
+                         next(self._seq), ticket))
+                self._work.notify_all()
 
     # ------------------------------------------------------------- resolve
     def _request_key(self, request: TuneRequest):
@@ -486,13 +554,91 @@ class MappingService:
         return warm_seeds_for(self.plans, app_name, procs, space,
                               exclude=exclude)
 
+    def _remap(self, ticket: Ticket) -> None:
+        """Serve one :class:`RemapRequest`: look up the stale winner and
+        nearby cached plans as seeds, run the (restricted, warm)
+        :func:`~repro.search.remap.remap_plan` search, and resolve the
+        ticket with a ``provenance="remap"`` plan carrying the physical
+        placement and recovery audit numbers. Remap plans are never
+        stored — they answer one concrete failure, not the cache's
+        (app, procs) question."""
+        req = ticket.request
+        t_start = time.perf_counter()
+        try:
+            from repro import apps
+
+            engine = req.engine or self.engine
+            dtype = req.dtype or self.dtype
+            app = apps.get(req.app)
+            if req.machine_shape is not None:
+                shape_over = tuple(int(s) for s in req.machine_shape)
+                app = dataclasses.replace(
+                    app, machine_shape=lambda p, s=shape_over: s)
+            tuned = time_tuned_app(app, steps=self.steps,
+                                   elem_bytes=self.elem_bytes, engine=engine,
+                                   dtype=dtype, cache=self.prices)
+            n0, key, tag = plan_key_for(tuned, req.procs, engine=engine,
+                                        dtype=dtype, beam=self.beam,
+                                        steps=self.steps,
+                                        elem_bytes=self.elem_bytes)
+            stale_payload = self.plans.get(key)
+            stale = (_candidate_from(stale_payload.get("candidate", {}))
+                     if stale_payload is not None else None)
+            seeds: list[Candidate] = []
+            if self.warm_start:
+                for payload in self.plans.nearest(app.name, n0, count=2,
+                                                  exclude=key):
+                    cand = _candidate_from(payload.get("candidate", {}))
+                    if cand is not None:
+                        seeds.append(cand)
+            result = remap_plan(
+                app, stale, req.failures, seeds=seeds, mode=req.mode,
+                engine=engine, dtype=dtype, cache=self.prices,
+                beam=self.beam, leaderboard=self.leaderboard,
+                steps=self.steps, elem_bytes=self.elem_bytes,
+                procs=req.procs)
+        except Exception as exc:  # noqa: BLE001 - typed rejection
+            self._resolve(ticket, Rejected("error", str(exc), req.app))
+            return
+        search_s = time.perf_counter() - t_start
+        summary = result.summary()
+        plan = dataclasses.replace(
+            plan_from_report(result.report, value_tag_=value_tag(engine,
+                                                                 dtype),
+                             provenance="remap",
+                             timings={"search_s": search_s}),
+            remap={k: summary[k] for k in (
+                "mode", "n_alive", "sub_shape", "proc_map", "placement",
+                "degraded_step_s", "stale_step_s")})
+        with self._lock:
+            self.stats.remaps += 1
+            self.stats.searches += 1
+            self.stats.search_s.append(search_s)
+            if result.report.warm_seeds:
+                self.stats.warm += 1
+            else:
+                self.stats.cold += 1
+        elapsed = time.perf_counter() - ticket.submit_t
+        if req.timeout_s is not None and elapsed > req.timeout_s:
+            self._resolve(ticket, Rejected(
+                "timeout",
+                f"resolved in {elapsed:.3f}s > budget {req.timeout_s}s",
+                req.app))
+            return
+        self._resolve(ticket, dataclasses.replace(plan, elapsed_s=elapsed))
+
     def _process(self, batch: list[Ticket]) -> None:
-        """Resolve one drained batch: exact cache hits answer
-        immediately; the rest coalesce by key, search Phases 1–2 each,
-        then price *every* search's Phase-3 jobs in one shared
-        ``price_jobs`` sweep before finishing Phase 4 per key."""
+        """Resolve one drained batch: remaps first (they outrank and
+        never coalesce — each answers a distinct failure), then exact
+        cache hits answer immediately; the rest coalesce by key, search
+        Phases 1–2 each, then price *every* search's Phase-3 jobs in
+        one shared ``price_jobs`` sweep before finishing Phase 4 per
+        key."""
         groups: dict[bytes, list] = {}   # key -> [tuned, n, tag, tickets]
         for ticket in batch:
+            if isinstance(ticket.request, RemapRequest):
+                self._remap(ticket)
+                continue
             req = ticket.request
             t_cache = time.perf_counter()
             try:
@@ -630,6 +776,7 @@ __all__ = [
     "MappingPlan",
     "MappingService",
     "Rejected",
+    "RemapRequest",
     "Ticket",
     "TuneRequest",
     "load_trace",

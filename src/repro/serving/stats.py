@@ -74,6 +74,11 @@ class ServiceStats:
     #: Cross-request shared pricing passes (one per drained batch that
     #: had at least one search).
     shared_pricing_passes: int = 0
+    #: Failure remaps served (priority RemapRequest resolutions).
+    remaps: int = 0
+    #: Worker-thread crashes survived: the batch being processed was
+    #: requeued (once per ticket) instead of dropped.
+    worker_crashes: int = 0
     latencies: list = dataclasses.field(default_factory=list)
     wait_s: list = dataclasses.field(default_factory=list)     # queue time
     cache_s: list = dataclasses.field(default_factory=list)    # lookup time
@@ -109,6 +114,8 @@ class ServiceStats:
             "coalesced": self.coalesced,
             "searches": self.searches,
             "shared_pricing_passes": self.shared_pricing_passes,
+            "remaps": self.remaps,
+            "worker_crashes": self.worker_crashes,
             "span_s": span,
             "requests_per_s": (resolved / span) if span > 0 else 0.0,
             "latency": latency_summary(self.latencies),

@@ -54,7 +54,7 @@ from typing import Iterator, Sequence
 
 import numpy as np
 
-from repro.core.machine import MachineSpec
+from repro.core.machine import DegradedMachine, MachineSpec
 from repro.sim.collectives import (
     CollectivePattern,
     PackedSchedule,
@@ -243,12 +243,28 @@ class BatchSimulator:
         inv = np.empty(a.size, dtype=np.int64)
         inv[a] = np.arange(a.size, dtype=np.int64)
         perm = b[inv]                    # processor permutation: b = perm∘a
-        for stride in self.topology.port_strides:
+        degraded = self.topology.degraded
+        for lvl, stride in enumerate(self.topology.port_strides):
             if stride == 1:
+                # Every proc is its own port: any permutation permutes the
+                # ports, and uniform bandwidth makes that free — unless
+                # per-port contention breaks the port symmetry.
+                if degraded is not None and degraded.contention is not None:
+                    cont = np.asarray(degraded.port_contention(lvl))
+                    if not (cont[perm] == cont).all():
+                        return False
                 continue
             blocks = (perm // stride).reshape(-1, stride)
             if not (blocks == blocks[:, :1]).all():
                 return False
+            if degraded is not None and degraded.contention is not None:
+                # The shift permutes this level's ports (port q -> image
+                # of its block); the fold is only exact if the induced
+                # port map preserves each port's contention factor.
+                cont = np.asarray(degraded.port_contention(lvl))
+                img = blocks[:, 0]
+                if not (cont[img] == cont).all():
+                    return False
         return True
 
     def _axis_period(self, agrid: np.ndarray, axis: int) -> int:
@@ -542,13 +558,14 @@ def batch_simulator(pattern: CollectivePattern, spec: MachineSpec,
                     grid: Sequence[int], *, step_flops: float,
                     elem_bytes: int = 4, backpressure: int = 2,
                     steps: int = 3,
-                    alphas: tuple[float, ...] | None = None
+                    alphas: tuple[float, ...] | None = None,
+                    degraded: "DegradedMachine | None" = None
                     ) -> BatchSimulator:
     """Build the batch engine for one (pattern, machine, grid) point:
     memoized packed schedule + topology + the app's compute leg."""
     grid = tuple(int(g) for g in grid)
     return BatchSimulator(
-        topology=Topology.from_spec(spec, alphas=alphas),
+        topology=Topology.from_spec(spec, alphas=alphas, degraded=degraded),
         schedule=packed_schedule(pattern, grid, elem_bytes=elem_bytes),
         compute_s=float(step_flops) / (spec.nprocs * spec.peak_flops),
         backpressure=backpressure,

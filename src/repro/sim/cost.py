@@ -30,7 +30,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.core.commvolume import CostModel
-from repro.core.machine import GPU, MachineSpec
+from repro.core.machine import GPU, DegradedMachine, MachineSpec
 from repro.sim.batch import (
     BatchSimulator,
     batch_simulator,
@@ -184,6 +184,11 @@ class SimulatedTimeCostModel(CostModel):
     #: NumPy reference bit-for-bit under the parity gates; "float32" is
     #: the opt-in lossy mode). Ignored by the host engines.
     dtype: str = "float64"
+    #: Fault state of the machine (dead procs + per-port contention). A
+    #: trivial view is normalized to None so a healthy-equivalent model
+    #: shares the healthy model's identity, cache tables, and prices
+    #: bit for bit.
+    degraded: DegradedMachine | None = None
     #: Optional persistent price store (``repro.sim.price_cache``):
     #: placements whose canonical form was ever priced under this model's
     #: table key short-circuit to a dict lookup — across processes.
@@ -199,6 +204,13 @@ class SimulatedTimeCostModel(CostModel):
                 f"engine must be 'batched', 'batched-jax' or 'event', "
                 f"got {self.engine!r}"
             )
+        if self.degraded is not None:
+            if self.degraded.spec != self.spec:
+                raise ValueError(
+                    "degraded view describes a different machine than spec"
+                )
+            if self.degraded.is_trivial:
+                object.__setattr__(self, "degraded", None)
 
     @property
     def value_tag(self) -> str:
@@ -218,22 +230,34 @@ class SimulatedTimeCostModel(CostModel):
         grid = tuple(int(g) for g in grid)
         compute_s = self.step_flops / (self.spec.nprocs
                                        * self.spec.peak_flops)
-        return digest(
+        parts = [
             repr(_pattern_key(self.pattern)).encode(),
             repr(grid).encode(),
             repr(self.spec).encode(),
             repr((self.elem_bytes, self.steps, self.backpressure,
                   float(compute_s))).encode(),
             self.value_tag.encode(),
-        )
+        ]
+        if self.degraded is not None:
+            # Only non-trivial degradations contribute, so every healthy
+            # model keeps its pre-existing table digests (and their
+            # on-disk caches) unchanged.
+            parts.append(repr((self.degraded.dead_procs,
+                               self.degraded.contention)).encode())
+        return digest(*parts)
 
     def price_row_key(self, grid: Sequence[int],
                       assign: np.ndarray) -> bytes:
         """The cache row digest of one placement: its isomorphism-class
         representative's bytes (congestion pricing is invariant under
-        per-level relabeling, so the whole class shares one row)."""
-        canon = canonical_assignment(np.asarray(assign, dtype=np.int64),
-                                     self.spec.shape)
+        per-level relabeling, so the whole class shares one row). A
+        degraded machine breaks that symmetry — dead procs and non-uniform
+        port contention distinguish relabelings — so its rows key on the
+        raw placement bytes instead."""
+        a = np.asarray(assign, dtype=np.int64)
+        if self.degraded is not None:
+            return digest(a.tobytes())
+        canon = canonical_assignment(a, self.spec.shape)
         return digest(canon.tobytes())
 
     def _validate(self, factors: Sequence[int]) -> tuple[int, ...]:
@@ -287,6 +311,7 @@ class SimulatedTimeCostModel(CostModel):
             self.pattern, self.spec, grid,
             step_flops=self.step_flops, elem_bytes=self.elem_bytes,
             backpressure=self.backpressure, steps=self.steps,
+            degraded=self.degraded,
         )
         if self.engine == "batched-jax":
             from repro.sim.jax_backend import to_jax
@@ -323,7 +348,7 @@ class SimulatedTimeCostModel(CostModel):
     def simulate(self, grid: tuple[int, ...], assign: np.ndarray) -> Timeline:
         """The exact event-queue reference for one placement (used for
         ``--simulate`` timelines and engine cross-validation)."""
-        topo = Topology.from_spec(self.spec)
+        topo = Topology.from_spec(self.spec, degraded=self.degraded)
         phases = build_phases(self.pattern, grid, assign,
                               elem_bytes=self.elem_bytes)
         compute_s = self.step_flops / (self.spec.nprocs * self.spec.peak_flops)
@@ -441,7 +466,8 @@ def simulate_app(app, procs: int | None = None, *,
 def time_search_space(app, *, steps: int = DEFAULT_STEPS,
                       elem_bytes: int = DEFAULT_ELEM_BYTES,
                       engine: str = "batched", dtype: str = "float64",
-                      cache: PriceCache | None = None):
+                      cache: PriceCache | None = None,
+                      degraded: DegradedMachine | None = None):
     """The app's SearchSpace with its volume objective swapped for the
     simulator — same grids, options, distributions and orders; only
     ``cost_model`` changes, so the tuner runs unchanged. ``engine``
@@ -450,7 +476,10 @@ def time_search_space(app, *, steps: int = DEFAULT_STEPS,
     (``"event"``, the reference the envelope is validated against);
     ``dtype`` selects the JAX engine's precision and ``cache`` threads a
     persistent :class:`~repro.sim.price_cache.PriceCache` through every
-    produced model."""
+    produced model. ``degraded`` prices every candidate on a degraded
+    machine (its spec must match the app's machine shape at the tuned
+    processor count — remap tunes fix the shape via a machine_shape
+    override)."""
     base_space = app.search_space
     if base_space is None:
         raise ValueError(f"application {app.name!r} declares no search space")
@@ -460,9 +489,17 @@ def time_search_space(app, *, steps: int = DEFAULT_STEPS,
 
     def cost_model(procs: int, opts: dict) -> SimulatedTimeCostModel:
         shape = tuple(int(s) for s in app.machine_shape(procs))
+        spec = spec_for(shape)
+        if degraded is not None and degraded.spec != spec:
+            raise ValueError(
+                f"degraded machine {degraded.spec.shape} does not match "
+                f"{app.name!r}'s machine shape {shape} at {procs} procs; "
+                f"fix the shape (e.g. a machine_shape override) before "
+                f"tuning degraded"
+            )
         return SimulatedTimeCostModel(
             pattern=pattern_with_options(pattern, opts),
-            spec=spec_for(shape),
+            spec=spec,
             step_flops=float(app.step_flops(procs)),
             base=base_space.cost_model(procs, opts),
             elem_bytes=elem_bytes,
@@ -470,6 +507,7 @@ def time_search_space(app, *, steps: int = DEFAULT_STEPS,
             engine=engine,
             dtype=dtype,
             cache=cache,
+            degraded=degraded,
         )
 
     return dataclasses.replace(base_space, cost_model=cost_model)
@@ -478,7 +516,8 @@ def time_search_space(app, *, steps: int = DEFAULT_STEPS,
 def time_tuned_app(app, *, steps: int = DEFAULT_STEPS,
                    elem_bytes: int = DEFAULT_ELEM_BYTES,
                    engine: str = "batched", dtype: str = "float64",
-                   cache: PriceCache | None = None):
+                   cache: PriceCache | None = None,
+                   degraded: DegradedMachine | None = None):
     """A copy of ``app`` whose tuner searches predicted seconds. The
     legacy volume-pair oracle is dropped from the copy (its units are
     elements, not seconds); ``benchmarks/sim_eval.py`` re-checks the
@@ -487,7 +526,8 @@ def time_tuned_app(app, *, steps: int = DEFAULT_STEPS,
         app,
         search_space=time_search_space(app, steps=steps,
                                        elem_bytes=elem_bytes, engine=engine,
-                                       dtype=dtype, cache=cache),
+                                       dtype=dtype, cache=cache,
+                                       degraded=degraded),
         tuning=None,
     )
 

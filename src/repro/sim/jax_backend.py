@@ -62,7 +62,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.machine import MachineSpec
+from repro.core.machine import DegradedMachine, MachineSpec
 from repro.sim.batch import BatchSimulator, ReadyPrices, _count
 from repro.sim.collectives import (
     CollectivePattern,
@@ -174,6 +174,17 @@ class _ScheduleExport:
         self.alphas = tuple(float(x) for x in topo.alphas)
         self.betas = tuple(float(x) for x in topo.betas)
         self.nprocs = topo.nprocs
+        # Per-level port contention factors of the degraded machine, or
+        # None when healthy (dead-proc checks stay host-side in
+        # ``_dispatch_slabs`` — a masked proc is a refusal, not a price).
+        degraded = topo.degraded
+        if degraded is not None and degraded.contention is not None:
+            self.cont = tuple(
+                np.asarray(degraded.port_contention(lvl), dtype=np.float64)
+                for lvl in range(len(topo.spec.shape))
+            )
+        else:
+            self.cont = None
         self.src = sched.src.astype(np.int32)
         self.dst = sched.dst.astype(np.int32)
         self.slab = sched.phase_id.astype(np.int32)
@@ -217,6 +228,12 @@ class _ScheduleExport:
         only when a stack spans several chunks (each chunk's input is
         dead the moment its program launches) and only off-CPU (the CPU
         backend does not implement donation and warns)."""
+        if use_pallas and self.cont is not None:
+            # The Pallas tables fold alpha into one byte weight per
+            # transfer; per-port contention needs the byte and alpha
+            # terms reduced separately, so route contended machines
+            # through the plain dense build (numerically identical).
+            use_pallas = False
         key = (mode, dtype, use_pallas, donate)
         hit = self._fns.get(key)
         if hit is None:
@@ -256,12 +273,19 @@ class _ScheduleExport:
             masks = exp._level_masks(src, dst)
             for L, (stride, ports, al, be) in enumerate(
                     zip(exp.strides, exp.nports, exp.alphas, exp.betas)):
+                cl = (jnp.asarray(exp.cont[L], dtype=dt)
+                      if exp.cont is not None else None)
                 if stride == 1:
                     # One message per (slab, port, direction): the slab
                     # time at this level is a pure segment-max of the
-                    # per-transfer uncontended times.
+                    # per-transfer times; under contention the slower of
+                    # the transfer's two ports sets its drain.
+                    if cl is None:
+                        t = al + nb / be
+                    else:
+                        t = al + nb * jnp.maximum(cl[src], cl[dst]) / be
                     t1 = jnp.concatenate(
-                        [jnp.where(masks[L], al + nb / be, 0.0), zero])
+                        [jnp.where(masks[L], t, 0.0), zero])
                     out = jnp.maximum(out, t1[jnp.asarray(exp.Ms)]
                                       .max(axis=1))
                 else:
@@ -269,12 +293,33 @@ class _ScheduleExport:
                     # inverse assignment, look up masked byte weights
                     # (alpha folded in), sum each subtree's `stride`
                     # processors, max over ports, both directions.
-                    w = jnp.concatenate(
-                        [jnp.where(masks[L], nb + al * be, 0.0), zero])
-                    eg = (w[jnp.asarray(exp.Ms)[:, inv]]
-                          .reshape(exp.u, ports, stride).sum(axis=2))
-                    ing = (w[jnp.asarray(exp.Md)[:, inv]]
-                           .reshape(exp.u, ports, stride).sum(axis=2))
+                    if cl is None:
+                        w = jnp.concatenate(
+                            [jnp.where(masks[L], nb + al * be, 0.0), zero])
+                        eg = (w[jnp.asarray(exp.Ms)[:, inv]]
+                              .reshape(exp.u, ports, stride).sum(axis=2))
+                        ing = (w[jnp.asarray(exp.Md)[:, inv]]
+                               .reshape(exp.u, ports, stride).sum(axis=2))
+                    else:
+                        # Contention scales a port's *byte* drain but not
+                        # its per-message alpha, so the folded weight
+                        # splits: bytes (scaled per port after the
+                        # segment sum) + alpha*beta (unscaled).
+                        wb = jnp.concatenate(
+                            [jnp.where(masks[L], nb, 0.0), zero])
+                        wa = jnp.concatenate(
+                            [jnp.where(masks[L], jnp.full_like(nb, al * be),
+                                       0.0), zero])
+                        Msi = jnp.asarray(exp.Ms)[:, inv]
+                        Mdi = jnp.asarray(exp.Md)[:, inv]
+                        eg = (wb[Msi].reshape(exp.u, ports, stride)
+                              .sum(axis=2) * cl[None, :]
+                              + wa[Msi].reshape(exp.u, ports, stride)
+                              .sum(axis=2))
+                        ing = (wb[Mdi].reshape(exp.u, ports, stride)
+                               .sum(axis=2) * cl[None, :]
+                               + wa[Mdi].reshape(exp.u, ports, stride)
+                               .sum(axis=2))
                     out = jnp.maximum(
                         out,
                         jnp.maximum(eg.max(axis=1), ing.max(axis=1)) / be,
@@ -361,9 +406,21 @@ class _ScheduleExport:
                     jnp.where(masks[L], oob // 2 + base + dst // stride,
                               oob),
                 ])
-                w = jnp.where(masks[L], nb + al * be, 0.0)
+                if exp.cont is None:
+                    w = jnp.where(masks[L], nb + al * be, 0.0)
+                    ws = jnp.concatenate([w, w])
+                else:
+                    # Scale each transfer's byte load by its port's
+                    # contention factor per direction; alpha unscaled.
+                    cl = jnp.asarray(exp.cont[L], dtype=dt)
+                    ws = jnp.concatenate([
+                        jnp.where(masks[L],
+                                  nb * cl[src // stride] + al * be, 0.0),
+                        jnp.where(masks[L],
+                                  nb * cl[dst // stride] + al * be, 0.0),
+                    ])
                 tab = jnp.zeros((2 * exp.u * ports,), dtype=dt).at[cell].add(
-                    jnp.concatenate([w, w]), mode="drop")
+                    ws, mode="drop")
                 out = jnp.maximum(
                     out,
                     (tab / be).reshape(2, exp.u, ports).max(axis=(0, 2)),
@@ -411,7 +468,7 @@ def _export_for(sched: PackedSchedule, topo: Topology) -> _ScheduleExport:
         cache = {}
         object.__setattr__(sched, "_jax_exports", cache)
         _EXPORT_HOSTS[id(sched)] = sched
-    key = (topo.spec, topo.alphas, topo.betas)
+    key = (topo.spec, topo.alphas, topo.betas, topo.degraded)
     hit = cache.get(key)
     if hit is None:
         _EXPORT_STATS["misses"] += 1
@@ -502,6 +559,11 @@ class JaxBatchSimulator(BatchSimulator):
         several chunks donate each chunk's input buffer back to XLA
         (off-CPU only; the CPU backend does not implement donation)."""
         exp = _export_for(self.schedule, self.topology)
+        degraded = self.topology.degraded
+        if degraded is not None and degraded.dead_procs:
+            # Masked procs are unplaceable: refuse on the host before any
+            # device dispatch (same contract as Topology.bucket_times).
+            self.topology.check_placeable(a)
         mode = exp.mode
         if mode == "dense" and not _rows_bijective(a, exp.nprocs):
             mode = "scatter"      # dense needs invertible rows
@@ -604,12 +666,14 @@ def jax_batch_simulator(pattern: CollectivePattern, spec: MachineSpec,
                         steps: int = 3,
                         alphas: tuple[float, ...] | None = None,
                         dtype: str = "float64",
-                        use_pallas: bool = False) -> JaxBatchSimulator:
+                        use_pallas: bool = False,
+                        degraded: "DegradedMachine | None" = None
+                        ) -> JaxBatchSimulator:
     """Build the JAX engine for one (pattern, machine, grid) point —
     the device-compiled counterpart of ``batch_simulator``."""
     grid = tuple(int(g) for g in grid)
     return JaxBatchSimulator(
-        topology=Topology.from_spec(spec, alphas=alphas),
+        topology=Topology.from_spec(spec, alphas=alphas, degraded=degraded),
         schedule=packed_schedule(pattern, grid, elem_bytes=elem_bytes),
         compute_s=float(step_flops) / (spec.nprocs * spec.peak_flops),
         backpressure=backpressure,

@@ -37,7 +37,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.machine import MachineSpec
+from repro.core.machine import DegradedMachine, MachineSpec
 
 #: Default per-message latencies by level depth, outermost first. The
 #: outermost fabric (DCI / inter-node Ethernet) is ~an order of magnitude
@@ -63,15 +63,25 @@ class Topology:
 
     ``alphas``/``betas`` are outermost-first, one entry per level of
     ``spec.shape``; ``betas`` defaults to ``spec.level_bws``.
+
+    ``degraded`` carries the machine's fault state
+    (:class:`~repro.core.machine.DegradedMachine`): transfers touching a
+    dead processor are refused (``ValueError`` — a masked proc is
+    unplaceable, not slow), and a port with contention factor ``c`` drains
+    bytes ``c`` times slower (alpha is unaffected). A trivial degradation
+    is normalized to ``None`` by :meth:`from_spec`, so a healthy-equivalent
+    ``DegradedMachine`` prices bit-identically to the healthy topology.
     """
 
     spec: MachineSpec
     alphas: tuple[float, ...]
     betas: tuple[float, ...]
+    degraded: DegradedMachine | None = None
 
     @classmethod
     def from_spec(cls, spec: MachineSpec,
-                  alphas: tuple[float, ...] | None = None) -> "Topology":
+                  alphas: tuple[float, ...] | None = None,
+                  degraded: DegradedMachine | None = None) -> "Topology":
         k = len(spec.shape)
         if alphas is None:
             alphas = ((DEFAULT_ALPHA_OUTER,) + (DEFAULT_ALPHA_INNER,) * (k - 1)
@@ -81,7 +91,58 @@ class Topology:
                 f"alphas needs one latency per level: got {len(alphas)} "
                 f"for {k} levels"
             )
-        return cls(spec=spec, alphas=tuple(alphas), betas=spec.level_bws)
+        if degraded is not None:
+            if degraded.spec != spec:
+                raise ValueError(
+                    "degraded view describes a different machine than spec"
+                )
+            if degraded.is_trivial:
+                degraded = None       # healthy-equivalent: keep bit-identity
+        return cls(spec=spec, alphas=tuple(alphas), betas=spec.level_bws,
+                   degraded=degraded)
+
+    # ------------------------------------------------------- degraded state
+    def _dead_array(self) -> np.ndarray:
+        """Dead processor ids as an int64 array (cached; empty if healthy)."""
+        arr = getattr(self, "_dead_cache", None)
+        if arr is None:
+            dead = self.degraded.dead_procs if self.degraded else ()
+            arr = np.asarray(dead, dtype=np.int64)
+            object.__setattr__(self, "_dead_cache", arr)
+        return arr
+
+    def _contention_flat(self) -> "tuple[np.ndarray, np.ndarray] | None":
+        """Per-port contention factors flattened across levels: returns
+        ``(flat, offsets)`` with ``flat[offsets[L] + port]`` the level-L
+        factor, or ``None`` when no port is contended (cached)."""
+        cached = getattr(self, "_cont_cache", "unset")
+        if cached == "unset":
+            if self.degraded is None or self.degraded.contention is None:
+                cached = None
+            else:
+                rows = [np.asarray(self.degraded.port_contention(lvl),
+                                   dtype=np.float64)
+                        for lvl in range(len(self.spec.shape))]
+                offsets = np.r_[
+                    0, np.cumsum([r.size for r in rows])
+                ].astype(np.int64)
+                cached = (np.concatenate(rows), offsets)
+            object.__setattr__(self, "_cont_cache", cached)
+        return cached
+
+    def check_placeable(self, procs: np.ndarray) -> None:
+        """Raise ``ValueError`` if any processor in ``procs`` is dead."""
+        dead = self._dead_array()
+        if dead.size == 0:
+            return
+        procs = np.asarray(procs, dtype=np.int64).reshape(-1)
+        bad = np.isin(procs, dead)
+        if bad.any():
+            hit = sorted(set(procs[bad].tolist()))[:8]
+            raise ValueError(
+                f"placement touches dead processor(s) {hit}: masked procs "
+                f"are unplaceable on this degraded machine"
+            )
 
     # -------------------------------------------------------------- routing
     @property
@@ -159,6 +220,9 @@ class Topology:
         out = np.zeros(n_buckets, dtype=np.float64)
         if src.size == 0:
             return out
+        if self.degraded is not None and self.degraded.dead_procs:
+            self.check_placeable(src)
+            self.check_placeable(dst)
         k = len(self.spec.shape)
         levels = self.crossing_levels(src, dst).astype(np.int64)
         valid = levels < k               # local copies never hit the fabric
@@ -180,9 +244,22 @@ class Topology:
         t_np = nports[levels]
         base = offsets[levels] + bucket * t_np
         dir_off = n_buckets * t_np
-        key = np.concatenate([base + src // strides[levels],
-                              base + dir_off + dst // strides[levels]])
-        w = np.concatenate([nbytes, nbytes])
+        eg_port = src // strides[levels]
+        in_port = dst // strides[levels]
+        key = np.concatenate([base + eg_port, base + dir_off + in_port])
+        cont = self._contention_flat()
+        if cont is None:
+            w = np.concatenate([nbytes, nbytes])
+        else:
+            # A contended port drains bytes `c` times slower: scale each
+            # transfer's byte load by its port's factor before summing.
+            # Alpha (message setup) is unaffected, so the msgs counts below
+            # stay untouched.
+            flat, cont_off = cont
+            w = np.concatenate([
+                nbytes * flat[cont_off[levels] + eg_port],
+                nbytes * flat[cont_off[levels] + in_port],
+            ])
         # Dense bincount when the port table is reasonably filled; the
         # sorted sparse sweep when transfers are much sparser than the
         # table (zeroing/scanning empty cells would dominate).

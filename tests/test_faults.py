@@ -1,0 +1,433 @@
+"""Fault-aware stack: DegradedMachine pricing, failure injection in the
+event engine, and the warm remap path (search + service).
+
+Acceptance contracts exercised here (mirrored by
+``benchmarks/resilience_bench.py``):
+
+  * a mask/contention-free ``DegradedMachine`` prices **bit-identically**
+    to the healthy machine through all three engines (event, batched
+    NumPy, batched JAX) — registry-wide;
+  * with degradation applied, batched-vs-event agreement stays <= 1e-9;
+  * remapped plans place **zero** work on masked processors.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro import apps
+from repro.core.machine import DegradedMachine, MachineSpec
+from repro.search.remap import (
+    degraded_from_failures,
+    price_on_degraded,
+    remap_plan,
+    submachine_options,
+)
+from repro.search.tuner import tune_app
+from repro.sim.batch import batch_simulator
+from repro.sim.collectives import build_phases
+from repro.sim.cost import (
+    SimulatedTimeCostModel,
+    default_assignment,
+    spec_for,
+    time_tuned_app,
+)
+from repro.sim.engine import (
+    FaultEvent,
+    NodeFailure,
+    simulate_steps,
+    simulate_steps_with_faults,
+)
+from repro.sim.topology import Topology
+
+SPEC24 = MachineSpec(shape=(2, 4), level_names=("node", "gpu"))
+
+
+def _app_model(app, *, engine="batched", degraded=None, procs=None):
+    n = procs or app.default_procs
+    spec = spec_for(app.machine_shape(n))
+    return SimulatedTimeCostModel(
+        pattern=app.collective, spec=spec,
+        step_flops=float(app.step_flops(n)),
+        engine=engine, degraded=degraded,
+    ), n, spec
+
+
+def _default_grid(app, n):
+    return app.search_space.default_grid(n) if app.search_space.default_grid \
+        else app.search_space.grids(n)[0]
+
+
+# ----------------------------------------------------------- DegradedMachine
+def test_degraded_machine_validates():
+    with pytest.raises(ValueError, match="out of range"):
+        DegradedMachine(spec=SPEC24, dead_procs=(8,))
+    with pytest.raises(ValueError, match="every processor"):
+        DegradedMachine(spec=SPEC24, dead_procs=tuple(range(8)))
+    with pytest.raises(ValueError, match="one tuple per level"):
+        DegradedMachine(spec=SPEC24, contention=((1.0, 1.0),))
+    with pytest.raises(ValueError, match="port factors"):
+        DegradedMachine(spec=SPEC24, contention=((1.0,), (1.0,) * 8))
+    with pytest.raises(ValueError, match=">= 1.0"):
+        DegradedMachine(spec=SPEC24, contention=((0.5, 1.0), (1.0,) * 8))
+
+
+def test_degraded_machine_queries_and_constructors():
+    deg = DegradedMachine.fail_procs(SPEC24, [5, 1, 5])
+    assert deg.dead_procs == (1, 5)            # sorted, deduped
+    assert deg.n_alive == 6
+    assert deg.alive_procs() == (0, 2, 3, 4, 6, 7)
+    assert not deg.is_trivial
+
+    node = DegradedMachine.fail_nodes(SPEC24, 0, [1])
+    assert node.dead_procs == (4, 5, 6, 7)
+
+    cont = DegradedMachine.contend(SPEC24, 0, {1: 2.0})
+    assert cont.port_contention(0) == (1.0, 2.0)
+    assert cont.port_contention(1) == (1.0,) * 8
+    assert not cont.is_trivial
+
+    assert DegradedMachine.healthy(SPEC24).is_trivial
+    assert DegradedMachine.contend(SPEC24, 0, {}).is_trivial
+
+
+def test_degraded_machine_merge_composes():
+    a = DegradedMachine.fail_procs(SPEC24, [0])
+    b = DegradedMachine.contend(SPEC24, 0, {1: 3.0})
+    c = DegradedMachine.contend(SPEC24, 0, {1: 2.0})
+    m = a.merged(b).merged(c)
+    assert m.dead_procs == (0,)
+    assert m.port_contention(0) == (1.0, 6.0)   # factors multiply
+    other = MachineSpec(shape=(4, 2), level_names=("node", "gpu"))
+    with pytest.raises(ValueError, match="different machines"):
+        a.merged(DegradedMachine.healthy(other))
+
+
+def test_trivial_view_normalizes_to_none():
+    topo = Topology.from_spec(SPEC24,
+                              degraded=DegradedMachine.healthy(SPEC24))
+    assert topo.degraded is None
+    model = SimulatedTimeCostModel(
+        pattern=apps.get("stencil").collective, spec=SPEC24,
+        step_flops=1e12, degraded=DegradedMachine.healthy(SPEC24))
+    assert model.degraded is None
+    healthy = SimulatedTimeCostModel(
+        pattern=apps.get("stencil").collective, spec=SPEC24,
+        step_flops=1e12)
+    assert model.price_table_key((2, 4)) == healthy.price_table_key((2, 4))
+
+
+# --------------------------------------------------------- pricing parity
+def test_trivial_degraded_bit_identical_registry_all_engines():
+    """Acceptance: a mask/contention-free DegradedMachine is bit-identical
+    to the healthy path through event, batched NumPy and batched JAX —
+    every registry app."""
+    for app in apps.iter_apps():
+        for engine in ("batched", "event", "batched-jax"):
+            model, n, spec = _app_model(app, engine=engine)
+            triv, _, _ = _app_model(
+                app, engine=engine,
+                degraded=DegradedMachine.healthy(spec))
+            grid = _default_grid(app, n)
+            assert triv.cost(grid) == model.cost(grid), (app.name, engine)
+
+
+def test_contended_batched_matches_event_registry():
+    """Acceptance: under port contention the analytic envelope still
+    tracks the event queue to 1e-9 — every registry app."""
+    for app in apps.iter_apps():
+        model, n, spec = _app_model(app)
+        deg = DegradedMachine.contend(spec, 0, {0: 2.5})
+        deg = deg.merged(
+            DegradedMachine.contend(spec, 1, {1: 1.5})
+            if len(spec.shape) > 1 else DegradedMachine.healthy(spec))
+        dm, _, _ = _app_model(app, degraded=deg)
+        de, _, _ = _app_model(app, engine="event", degraded=deg)
+        grid = _default_grid(app, n)
+        assign = dm._default_assignment(grid)
+        tb = dm.batch(grid).step_time(assign)
+        te = de.simulate(grid, assign).per_step_time()
+        assert tb == pytest.approx(te, abs=1e-9), app.name
+        healthy, _, _ = _app_model(app)
+        assert tb >= healthy.batch(grid).step_time(assign), app.name
+
+
+def test_contended_jax_matches_numpy():
+    app = apps.get("summa")
+    _, n, spec = _app_model(app)
+    deg = DegradedMachine.contend(spec, 0, {0: 2.5, 1: 1.7})
+    dn, _, _ = _app_model(app, degraded=deg)
+    dj, _, _ = _app_model(app, engine="batched-jax", degraded=deg)
+    grid = _default_grid(app, n)
+    assign = dn._default_assignment(grid)
+    tn = dn.batch(grid).step_time(assign)
+    tj = dj.batch(grid).step_time(assign)
+    assert tj == pytest.approx(tn, rel=1e-9)
+
+
+def test_dead_processors_are_unplaceable_all_engines():
+    app = apps.get("stencil")
+    _, n, spec = _app_model(app)
+    deg = DegradedMachine.fail_procs(spec, [3])
+    grid = _default_grid(app, n)
+    assign = default_assignment(spec.shape, grid)   # touches proc 3
+    for engine in ("batched", "batched-jax"):
+        model, _, _ = _app_model(app, engine=engine, degraded=deg)
+        with pytest.raises(ValueError, match="dead processor"):
+            model.batch(grid).step_times(
+                np.asarray(assign, dtype=np.int64).reshape(1, -1),
+                fold=False)
+    event, _, _ = _app_model(app, engine="event", degraded=deg)
+    with pytest.raises(ValueError, match="dead processor"):
+        event.simulate(grid, assign)
+
+
+def test_fold_respects_contention_symmetry():
+    """Folded pricing must refuse (and fall back) when a shift breaks the
+    per-port contention pattern — folded == dense either way."""
+    app = apps.get("summa")
+    n = 16
+    spec = spec_for(app.machine_shape(n))
+    deg = DegradedMachine.contend(spec, 0, {0: 3.0})
+    sim = batch_simulator(app.collective, spec, (4, 4),
+                          step_flops=float(app.step_flops(n)),
+                          degraded=deg)
+    stack = np.stack([
+        default_assignment(spec.shape, (4, 4)).reshape(-1),
+        np.roll(default_assignment(spec.shape, (4, 4)).reshape(-1), 4),
+    ])
+    folded = sim.step_times(stack, fold=True)
+    dense = sim.step_times(stack, fold=False)
+    np.testing.assert_array_equal(folded, dense)
+
+
+# ----------------------------------------------------------- fault injection
+def test_fault_event_validates():
+    with pytest.raises(ValueError, match="kind"):
+        FaultEvent(t=0.0, kind="meteor")
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultEvent(t=-1.0, kind="node-death", procs=(0,))
+    with pytest.raises(ValueError, match="at least one processor"):
+        FaultEvent(t=0.0, kind="node-death")
+    with pytest.raises(ValueError, match="factor"):
+        FaultEvent(t=0.0, kind="link-slowdown", factor=0.5)
+    with pytest.raises(ValueError, match="duration"):
+        FaultEvent(t=0.0, kind="link-slowdown", factor=2.0, duration=0.0)
+
+
+def _stencil_setup():
+    app = apps.get("stencil")
+    n = app.default_procs
+    spec = spec_for(app.machine_shape(n))
+    grid = _default_grid(app, n)
+    assign = default_assignment(spec.shape, grid)
+    phases = build_phases(app.collective, grid, assign, elem_bytes=4)
+    compute_s = float(app.step_flops(n)) / (n * spec.peak_flops)
+    return spec, grid, assign, phases, compute_s
+
+
+def test_no_faults_bit_identical_to_simulate_steps():
+    spec, _, _, phases, compute_s = _stencil_setup()
+    topo = Topology.from_spec(spec)
+    base = simulate_steps(phases, topo, compute_s=compute_s, steps=3)
+    run = simulate_steps_with_faults(phases, topo, compute_s=compute_s,
+                                     steps=3)
+    assert run.survived
+    assert run.timeline == base
+    assert run.per_step_time() == base.per_step_time()
+
+
+def test_node_death_halts_with_typed_failure():
+    spec, _, assign, phases, compute_s = _stencil_setup()
+    topo = Topology.from_spec(spec)
+    base = simulate_steps(phases, topo, compute_s=compute_s, steps=3)
+    t_kill = base.makespan / 2
+    run = simulate_steps_with_faults(
+        phases, topo, compute_s=compute_s, steps=3,
+        faults=[FaultEvent(t=t_kill, kind="node-death", procs=(2,))],
+        placement=assign)
+    assert not run.survived
+    assert isinstance(run.failure, NodeFailure)
+    assert run.failure.procs == (2,)
+    assert run.failure.time == t_kill
+    assert run.timeline.makespan == t_kill
+    assert all(s.end <= t_kill for s in run.timeline.segments)
+    with pytest.raises(ValueError, match="no step time"):
+        run.per_step_time()
+
+
+def test_node_death_outside_placement_is_survived():
+    spec, _, _, phases, compute_s = _stencil_setup()
+    topo = Topology.from_spec(spec)
+    base = simulate_steps(phases, topo, compute_s=compute_s, steps=3)
+    run = simulate_steps_with_faults(
+        phases, topo, compute_s=compute_s, steps=3,
+        faults=[FaultEvent(t=base.makespan / 2, kind="node-death",
+                           procs=(2,))],
+        placement=[p for p in range(spec.nprocs) if p != 2][:4])
+    assert run.survived and run.timeline.makespan == base.makespan
+
+
+def test_link_slowdown_window_reprices_dispatches():
+    spec, _, _, phases, compute_s = _stencil_setup()
+    topo = Topology.from_spec(spec)
+    base = simulate_steps(phases, topo, compute_s=compute_s, steps=3)
+    # Window covering the whole run: slower than healthy.
+    slow = simulate_steps_with_faults(
+        phases, topo, compute_s=compute_s, steps=3,
+        faults=[FaultEvent(t=0.0, kind="link-slowdown", level=0,
+                           factor=4.0, duration=base.makespan * 10)])
+    assert slow.survived
+    assert slow.timeline.makespan > base.makespan
+    # Window entirely after the run: bit-identical to healthy.
+    late = simulate_steps_with_faults(
+        phases, topo, compute_s=compute_s, steps=3,
+        faults=[FaultEvent(t=base.makespan * 10, kind="link-slowdown",
+                           level=0, factor=4.0, duration=1.0)])
+    assert late.timeline == base
+    # Permanent window == statically contended machine's makespan.
+    deg = DegradedMachine.contend(
+        spec, 0, {p: 4.0 for p in range(spec.level_ports[0])})
+    static = simulate_steps(
+        phases, Topology.from_spec(spec, degraded=deg),
+        compute_s=compute_s, steps=3)
+    assert slow.timeline.makespan == pytest.approx(static.makespan,
+                                                   rel=1e-12)
+
+
+# ------------------------------------------------------------------- remap
+def test_degraded_from_failures_folds_evidence():
+    spec = SPEC24
+    view = degraded_from_failures(spec, [
+        NodeFailure(time=1.0, step=3, procs=(1,)),
+        FaultEvent(t=0.5, kind="node-death", procs=(2,)),
+        FaultEvent(t=0.1, kind="link-slowdown", factor=2.0),  # weather
+        5,
+        DegradedMachine.contend(spec, 0, {0: 2.0}),
+    ])
+    assert view.dead_procs == (1, 2, 5)
+    assert view.port_contention(0) == (2.0, 1.0)
+    ready = DegradedMachine.fail_procs(spec, [7])
+    assert degraded_from_failures(spec, ready) is ready
+    with pytest.raises(ValueError, match="different machine"):
+        degraded_from_failures(
+            spec, DegradedMachine.healthy(
+                MachineSpec(shape=(4, 2), level_names=("node", "gpu"))))
+
+
+def test_submachine_options_rank_and_avoid_dead():
+    deg = DegradedMachine.fail_procs(SPEC24, [3])
+    opts = list(submachine_options(deg))
+    (shape0, pm0) = opts[0]
+    # 7 survive but nodes are uneven (3+4): the best *regular* grid is
+    # 2 nodes x 3 procs = 6.
+    assert shape0 == (2, 3) and len(pm0) == 6
+    for shape, pm in opts:
+        a, g = shape
+        assert len(pm) == a * g
+        assert not set(pm) & set(deg.dead_procs)
+        # node-major: logical node i' lives inside ONE physical node
+        for i in range(a):
+            nodes = {pm[i * g + k] // 4 for k in range(g)}
+            assert len(nodes) == 1
+
+
+def test_remap_places_zero_work_on_masked_procs_registry():
+    """Acceptance: remapped plans never touch a dead processor — every
+    registry app, one dead proc."""
+    for app in apps.iter_apps():
+        n = app.default_procs
+        spec = spec_for(app.machine_shape(n))
+        deg = DegradedMachine.fail_procs(spec, [n - 1])
+        res = remap_plan(app, None, deg, mode="warm")
+        placed = set(res.placement.reshape(-1).tolist())
+        assert not placed & set(deg.dead_procs), app.name
+        assert placed <= set(deg.alive_procs()), app.name
+        assert np.isfinite(res.degraded_step_s), app.name
+        assert res.procs == res.sub_shape[0] * res.sub_shape[1]
+
+
+def test_remap_warm_start_never_worse_than_stale():
+    """On a contention-only degradation (stale plan still placeable) the
+    remap — seeded with the stale winner — must never price worse than
+    keeping the stale placement."""
+    for name in ("stencil", "summa"):
+        app = apps.get(name)
+        n = app.default_procs
+        spec = spec_for(app.machine_shape(n))
+        stale = tune_app(time_tuned_app(app), n)
+        deg = DegradedMachine.contend(spec, 0, {0: 3.0})
+        res = remap_plan(app, stale, deg, mode="warm")
+        assert np.isfinite(res.stale_step_s)
+        assert res.degraded_step_s <= res.stale_step_s * (1 + 1e-12), name
+        # the seeded points replaced the full Phase-1 enumeration
+        assert "restricted search" in res.report.note
+
+
+def test_remap_stale_plan_on_dead_proc_prices_inf():
+    app = apps.get("stencil")
+    n = app.default_procs
+    spec = spec_for(app.machine_shape(n))
+    stale = tune_app(time_tuned_app(app), n)
+    res = remap_plan(app, stale, DegradedMachine.fail_procs(spec, [0]))
+    assert res.stale_step_s == float("inf")
+    assert np.isfinite(res.degraded_step_s)
+
+
+def test_remap_audit_price_matches_event_engine():
+    """The batched audit pricing of the physically translated placement
+    agrees with the exact event queue on the same degraded machine."""
+    from repro.sim.cost import pattern_with_options
+
+    app = apps.get("stencil")
+    n = app.default_procs
+    spec = spec_for(app.machine_shape(n))
+    deg = DegradedMachine.fail_procs(spec, [0]).merged(
+        DegradedMachine.contend(spec, 0, {1: 2.0}))
+    res = remap_plan(app, None, deg)
+    best = res.report.best.candidate
+    pattern = pattern_with_options(app.collective, dict(best.options))
+    grid = tuple(int(g) for g in best.grid)
+    compute_s = float(app.step_flops(res.procs)) / (res.procs
+                                                    * spec.peak_flops)
+    phases = build_phases(pattern, grid, res.placement, elem_bytes=4)
+    t_event = simulate_steps(
+        phases, Topology.from_spec(spec, degraded=deg),
+        compute_s=compute_s, steps=3).per_step_time()
+    t_batched = price_on_degraded(app, deg, best, res.placement,
+                                  procs=res.procs)
+    assert t_batched == pytest.approx(t_event, abs=1e-9)
+
+
+def test_remap_warm_vs_cold_same_submachine():
+    app = apps.get("summa")
+    n = app.default_procs
+    spec = spec_for(app.machine_shape(n))
+    stale = tune_app(time_tuned_app(app), n)
+    deg = DegradedMachine.fail_procs(spec, [1])
+    warm = remap_plan(app, stale, deg, mode="warm")
+    cold = remap_plan(app, stale, deg, mode="cold")
+    assert warm.sub_shape == cold.sub_shape
+    assert warm.mode == "warm" and cold.mode == "cold"
+    # cold runs the full enumeration: it can only match or beat warm
+    assert cold.degraded_step_s <= warm.degraded_step_s * (1 + 1e-12)
+    with pytest.raises(ValueError, match="mode"):
+        remap_plan(app, stale, deg, mode="lukewarm")
+
+
+def test_remap_refuses_when_nothing_survives_feasibly():
+    import dataclasses
+
+    app = apps.get("cannon")
+    # A space that needs at least a 2x2 square grid: 3 survivors cannot
+    # host it on any regular sub-machine.
+    space = dataclasses.replace(
+        app.search_space, grid_ok=lambda f: f[0] == f[1] >= 2)
+    strict = dataclasses.replace(app, search_space=space)
+    spec = spec_for(app.machine_shape(4))
+    deg = DegradedMachine.fail_procs(spec, [0])        # 3 of 4 survive
+    with pytest.raises(ValueError, match="sub-machine"):
+        remap_plan(strict, None, deg, procs=4)
+    bare = dataclasses.replace(app, search_space=None)
+    with pytest.raises(ValueError, match="search space"):
+        remap_plan(bare, None, deg)

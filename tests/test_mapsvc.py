@@ -395,3 +395,108 @@ def test_serve_cli_demo_smoke(tmp_path, capsys):
     out = capsys.readouterr().out
     assert rc == 0
     assert '"submitted": 4' in out
+
+
+# ------------------------------------------------------------------- remap
+def test_remap_request_resolves_with_recovery_facts(tmp_path):
+    from repro.serving.mapsvc import RemapRequest
+
+    with MappingService(tmp_path, workers=0) as svc:
+        svc.map(TuneRequest("stencil", procs=8))     # cache the healthy plan
+        res = svc.map(RemapRequest(app="stencil", failures=[3], procs=8))
+        assert isinstance(res, MappingPlan)
+        assert res.provenance == "remap"
+        facts = res.remap
+        assert facts is not None
+        assert 3 not in facts["proc_map"]
+        placed = {p for row in facts["placement"] for p in
+                  (row if isinstance(row, list) else [row])}
+        assert 3 not in placed
+        # stale plan touched the dead proc -> impossible; remap is finite
+        assert facts["stale_step_s"] == float("inf")
+        assert facts["degraded_step_s"] < float("inf")
+        assert svc.stats.remaps == 1
+        assert json.dumps(res.summary())             # serializable surface
+
+
+def test_remap_outranks_queued_tunes(tmp_path):
+    from repro.serving.mapsvc import RemapRequest
+
+    svc = MappingService(tmp_path, workers=0, coalesce=1)
+    tune = svc.submit(TuneRequest("cannon", priority=0))
+    remap = svc.submit(RemapRequest(app="stencil", failures=[0], procs=8))
+    svc.drain()
+    # default remap priority -1 dispatches before the priority-0 tune
+    assert isinstance(remap.result(), MappingPlan)
+    assert remap.result().elapsed_s <= tune.result().elapsed_s or (
+        svc.stats.completed == 2)
+    svc.close()
+
+
+def test_remap_bad_failures_returns_typed_error(tmp_path):
+    from repro.serving.mapsvc import RemapRequest
+
+    with MappingService(tmp_path, workers=0) as svc:
+        res = svc.map(RemapRequest(app="stencil", failures=list(range(8)),
+                                   procs=8))
+    assert isinstance(res, Rejected) and res.reason == "error"
+
+
+# ------------------------------------------------------------ worker crash
+def test_worker_crash_requeues_batch_once(tmp_path, monkeypatch):
+    svc = MappingService(tmp_path, workers=0)
+    real_process = svc._process
+    crashes = {"n": 0}
+
+    def crashing(batch):
+        if crashes["n"] == 0:
+            crashes["n"] += 1
+            raise RuntimeError("worker died")
+        real_process(batch)
+
+    monkeypatch.setattr(svc, "_process", crashing)
+    ticket = svc.submit(TuneRequest("cannon"))
+    svc.drain()
+    res = ticket.result()
+    assert isinstance(res, MappingPlan)              # requeued, then served
+    assert svc.stats.worker_crashes == 1
+    assert svc.stats.summary()["worker_crashes"] == 1
+    svc.close()
+
+
+def test_worker_crash_twice_rejects_instead_of_hanging(tmp_path, monkeypatch):
+    svc = MappingService(tmp_path, workers=0)
+    monkeypatch.setattr(
+        svc, "_process",
+        lambda batch: (_ for _ in ()).throw(RuntimeError("dead again")))
+    ticket = svc.submit(TuneRequest("cannon"))
+    svc.drain()
+    res = ticket.result()
+    assert isinstance(res, Rejected) and res.reason == "error"
+    assert "twice" in res.detail
+    assert svc.stats.worker_crashes == 2
+    svc.close()
+
+
+def test_worker_thread_crash_requeues_with_live_workers(tmp_path):
+    """End to end through real worker threads: the first batch attempt
+    dies inside the worker, the ticket is requeued and still resolves."""
+    svc = MappingService(tmp_path, workers=2)
+    real_process = svc._process
+    lock = threading.Lock()
+    crashed = {"done": False}
+
+    def crash_once(batch):
+        with lock:
+            first = not crashed["done"]
+            crashed["done"] = True
+        if first:
+            raise RuntimeError("simulated worker death")
+        real_process(batch)
+
+    svc._process = crash_once
+    ticket = svc.submit(TuneRequest("stencil"))
+    res = ticket.result(timeout=60.0)
+    assert isinstance(res, MappingPlan)
+    assert svc.stats.worker_crashes == 1
+    svc.close()

@@ -1,0 +1,170 @@
+"""Runtime resilience edge cases: FailureInjector fire-once semantics,
+Supervisor restart policy corners, StragglerMonitor degenerate inputs,
+and fault-aware restore through ``remap_fn``."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    FailureInjector,
+    SimulatedFailure,
+    StragglerMonitor,
+    Supervisor,
+)
+
+
+class FakeCheckpoints:
+    """Dict-backed stand-in for CheckpointManager (state is any object)."""
+
+    def __init__(self):
+        self.saved: dict[int, object] = {}
+
+    def save(self, step, state, extra=None):
+        self.saved[step] = state
+
+    def latest_step(self):
+        return max(self.saved) if self.saved else None
+
+    def restore(self, step):
+        return step, self.saved[step], {}
+
+
+def counting_step(log):
+    def step_fn(step, state):
+        log.append(step)
+        return state + 1, {"loss": float(state)}
+    return step_fn
+
+
+# ------------------------------------------------------------------ injector
+def test_injector_fires_each_step_at_most_once():
+    inj = FailureInjector(fail_at_steps=(3, 5))
+    with pytest.raises(SimulatedFailure):
+        inj.check(3)
+    inj.check(3)                       # replayed after restore: no re-raise
+    with pytest.raises(SimulatedFailure):
+        inj.check(5)
+    inj.check(5)
+    assert inj.fired == 2
+
+
+def test_injector_max_failures_caps_distinct_steps():
+    inj = FailureInjector(fail_at_steps=(1, 2, 3), max_failures=2)
+    for step in (1, 2):
+        with pytest.raises(SimulatedFailure):
+            inj.check(step)
+    inj.check(3)                       # budget spent
+    assert inj.fired == 2
+
+
+def test_restart_from_no_checkpoint_does_not_loop():
+    """The satellite regression: a failure before the first checkpoint
+    restarts from the initial state, replays the failing step, and must
+    NOT re-fire — one restart, then clean completion."""
+    mgr = FakeCheckpoints()
+    sup = Supervisor(mgr, max_restarts=3)
+    log = []
+    state, history = sup.run(
+        state=0, start_step=0, n_steps=6, step_fn=counting_step(log),
+        save_every=100,                # never checkpoints
+        injector=FailureInjector(fail_at_steps=(2,)),
+    )
+    assert sup.restarts == 1
+    events = [h for h in history if "event" in h]
+    assert len(events) == 1 and events[0]["event"].startswith("restart")
+    # steps 0..5 all completed; 0 and 1 replayed once after the restart
+    assert log == [0, 1, 0, 1, 2, 3, 4, 5]
+
+
+def test_supervisor_exceeding_max_restarts_reraises():
+    mgr = FakeCheckpoints()
+    sup = Supervisor(mgr, max_restarts=2)
+    log = []
+    with pytest.raises(SimulatedFailure):
+        sup.run(
+            state=0, start_step=0, n_steps=8, step_fn=counting_step(log),
+            save_every=1,
+            injector=FailureInjector(fail_at_steps=(1, 2, 3)),
+        )
+    assert sup.restarts == 3           # third failure exceeded the budget
+
+
+def test_supervisor_restores_latest_checkpoint():
+    mgr = FakeCheckpoints()
+    sup = Supervisor(mgr, max_restarts=3)
+    log = []
+    state, history = sup.run(
+        state=0, start_step=0, n_steps=10, step_fn=counting_step(log),
+        save_every=4,
+        injector=FailureInjector(fail_at_steps=(6,)),
+    )
+    assert state == 10
+    restored = [h for h in history if "event" in h]
+    assert len(restored) == 1 and restored[0]["event"].startswith("restored")
+    assert restored[0]["step"] == 4    # rewound to the step-4 checkpoint
+
+
+def test_supervisor_remap_fn_swaps_step_function():
+    """Fault-aware restore: remap_fn's plan replaces the step function and
+    is recorded in the history (minus the callable)."""
+    mgr = FakeCheckpoints()
+    sup = Supervisor(mgr, max_restarts=3)
+    before, after = [], []
+
+    def remap_fn(exc):
+        assert isinstance(exc, SimulatedFailure)
+        return {"step_fn": counting_step(after), "mesh": {"data": 6},
+                "usable_chips": 6}
+
+    state, history = sup.run(
+        state=0, start_step=0, n_steps=6, step_fn=counting_step(before),
+        save_every=2,
+        injector=FailureInjector(fail_at_steps=(3,)),
+        remap_fn=remap_fn,
+    )
+    assert state == 6
+    remaps = [h for h in history if h.get("event") == "remapped"]
+    assert len(remaps) == 1
+    assert remaps[0]["plan"] == {"mesh": {"data": 6}, "usable_chips": 6}
+    assert "step_fn" not in remaps[0]["plan"]
+    assert before == [0, 1, 2] and after == [2, 3, 4, 5]
+
+
+def test_supervisor_remap_fn_none_keeps_plan():
+    mgr = FakeCheckpoints()
+    sup = Supervisor(mgr, max_restarts=3)
+    log = []
+    state, history = sup.run(
+        state=0, start_step=0, n_steps=4, step_fn=counting_step(log),
+        save_every=2,
+        injector=FailureInjector(fail_at_steps=(2,)),
+        remap_fn=lambda exc: None,
+    )
+    assert state == 4
+    assert not [h for h in history if h.get("event") == "remapped"]
+
+
+# ----------------------------------------------------------------- straggler
+def test_straggler_monitor_single_replica_emits_no_plan():
+    mon = StragglerMonitor(n_replicas=1)
+    for _ in range(20):
+        report = mon.observe(np.array([1.0]))
+    assert report["stragglers"] == []
+    assert report["plan"] is None
+    assert report["max_over_median"] == pytest.approx(1.0)
+
+
+def test_straggler_monitor_all_equal_emits_no_plan():
+    mon = StragglerMonitor(n_replicas=8)
+    for _ in range(20):
+        report = mon.observe(np.full(8, 2.5))
+    assert report["stragglers"] == []
+    assert report["plan"] is None
+
+
+def test_straggler_monitor_zero_times_no_div_by_zero():
+    mon = StragglerMonitor(n_replicas=4)
+    report = mon.observe(np.zeros(4))
+    assert report["plan"] is None
+    assert np.isfinite(report["max_over_median"])

@@ -168,8 +168,26 @@ def test_elastic_plan_after_chip_loss():
         n_heads=32, n_kv_heads=8, param_count=2e9,
     )
     plan = elastic_plan(509, wl)          # lost 3 chips of 512
-    assert plan["usable_chips"] == 256    # degrade to a power of two
+    # 509 is infeasible (prime; dp must divide the batch) — land on the
+    # nearest feasible count that fits the survivors, not a blanket
+    # power-of-two collapse.
+    assert plan["usable_chips"] == 256
     assert plan["mesh"]["data"] * plan["mesh"]["model"] == 256
+
+
+def test_elastic_plan_keeps_non_power_of_two_survivors():
+    from repro.core.autosharder import LMWorkload
+
+    wl = LMWorkload(
+        global_batch=240, seq_len=4096, d_model=2048, n_layers=24,
+        n_heads=32, n_kv_heads=8, param_count=2e9,
+    )
+    plan = elastic_plan(12, wl)           # lost 4 chips of 16
+    # dp=12 divides the 240 batch: all 12 survivors stay in the mesh
+    # (the old power-of-two shortcut collapsed this to 8).
+    assert plan["usable_chips"] == 12
+    assert plan["idle_chips"] == 0
+    assert plan["mesh"]["data"] * plan["mesh"]["model"] == 12
 
 
 # ---------------------------------------------------------------- compression
